@@ -1,0 +1,19 @@
+//! Metric study (paper §6.4): how the choice of measurement changes
+//! what gets flagged as a bottleneck.
+//!
+//!     cargo run --release --example metric_comparison
+//!
+//! This drives the fig20_23 experiment through the public API and
+//! prints the comparison: CRNM flags exactly the true bottlenecks,
+//! plain wall-clock over-reports wait-dominated regions, CPI misses the
+//! dominant ones while over-weighting small high-CPI loops.
+
+use autoanalyzer::cluster::backend::select_backend;
+use autoanalyzer::eval::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let backend = select_backend("auto", "artifacts")?;
+    println!("{}", run_experiment("fig20_23", backend.as_ref())?);
+    println!("metric_comparison OK");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts for rust/PJRT.
+
+Emits HLO *text* (NOT lowered.compiler_ir("hlo") protos and NOT
+.serialize()): the xla crate links xla_extension 0.5.1 whose proto
+loader rejects the 64-bit instruction ids jax >= 0.5 emits; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts are shape-static, so each entry point is lowered once per
+bucket shape; the rust runtime (rust/src/runtime/) pads inputs to the
+nearest bucket and slices outputs back. artifacts/manifest.json maps
+(entry, shape) -> file so bucket selection is data-driven.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Bucket shapes. M = processes/threads, N = feature columns (code
+# regions), R = k-means points (code regions), K = severity bands.
+PAIRWISE_M = (8, 16, 32, 64, 128)
+PAIRWISE_N = (32, 128)
+KMEANS_R = (16, 32, 64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pairwise(m: int, n: int) -> str:
+    x = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    mask = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return to_hlo_text(jax.jit(model.pairwise_dists_masked).lower(x, mask))
+
+
+def lower_kmeans(r: int, k: int) -> str:
+    pts = jax.ShapeDtypeStruct((r,), jnp.float32)
+    mask = jax.ShapeDtypeStruct((r,), jnp.float32)
+    cent = jax.ShapeDtypeStruct((k,), jnp.float32)
+    return to_hlo_text(jax.jit(model.kmeans_cluster).lower(pts, mask, cent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"kmeans_iters": model.KMEANS_ITERS, "severity_k": model.SEVERITY_K,
+                "entries": []}
+
+    for m in PAIRWISE_M:
+        for n in PAIRWISE_N:
+            name = f"pairwise_m{m}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            with open(path, "w") as f:
+                f.write(lower_pairwise(m, n))
+            manifest["entries"].append(
+                {"entry": "pairwise", "m": m, "n": n, "file": name,
+                 "outputs": ["dists f32[m,m]"]})
+            print(f"lowered pairwise m={m} n={n} -> {name}")
+
+    k = model.SEVERITY_K
+    for r in KMEANS_R:
+        name = f"kmeans_r{r}_k{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(lower_kmeans(r, k))
+        manifest["entries"].append(
+            {"entry": "kmeans", "r": r, "k": k, "file": name,
+             "outputs": ["centroids f32[k]", "assign i32[r]", "inertia f32"]})
+        print(f"lowered kmeans r={r} k={k} -> {name}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest with %d entries" % len(manifest["entries"]))
+
+
+if __name__ == "__main__":
+    main()

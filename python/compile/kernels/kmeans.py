@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused masked k-means step for severity clustering.
+
+AutoAnalyzer classifies the per-region mean CRNM values into five severity
+categories (very-low .. very-high) with 1-D k-means (Section 4.2.2), and
+re-uses the same clustering to binarize the rough-set attribute columns
+(Section 4.4.2). One step = assign each point to the nearest centroid,
+then recompute each centroid as the masked mean of its members.
+
+The kernel fuses assignment + update in one VMEM-resident pass: for the
+paper's scale (R <= 256 regions, K = 5) everything fits in a single block,
+so the whole iteration is one kernel launch; L2 wraps it in a
+lax.fori_loop for a fixed iteration count (AOT-friendly, no dynamic
+convergence test in the artifact — rust checks the returned inertia).
+
+Padding protocol: callers pad `points` to the bucket length and pass
+`mask` (1.0 valid / 0.0 pad). Padded points are assigned cluster 0 but
+contribute zero weight to every centroid update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_step_kernel(pts_ref, mask_ref, cent_ref, newc_ref, assign_ref):
+    pts = pts_ref[...]  # (R,)
+    mask = mask_ref[...]  # (R,)
+    cent = cent_ref[...]  # (K,)
+    # Assign: (R, K) distance table; 1-D points so |p - c|.
+    diff = pts[:, None] - cent[None, :]
+    d2 = diff * diff
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)  # (R,)
+    # Update: masked one-hot means. Empty clusters keep their centroid
+    # (paper's k-means does the same — severity bands never collapse).
+    onehot = (assign[:, None] == jnp.arange(cent.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * mask[:, None]
+    wsum = jnp.sum(onehot * pts[:, None], axis=0)  # (K,)
+    wcnt = jnp.sum(onehot, axis=0)  # (K,)
+    newc = jnp.where(wcnt > 0, wsum / jnp.maximum(wcnt, 1.0), cent)
+    newc_ref[...] = newc
+    assign_ref[...] = assign
+
+
+def kmeans_step(points: jax.Array, mask: jax.Array, centroids: jax.Array):
+    """One fused assign+update step.
+
+    points: (R,) f32; mask: (R,) f32 validity; centroids: (K,) f32.
+    returns (new_centroids (K,) f32, assignments (R,) i32).
+    """
+    r = points.shape[0]
+    k = centroids.shape[0]
+    return pl.pallas_call(
+        _kmeans_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ),
+        interpret=True,
+    )(points, mask, centroids)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled pairwise squared-Euclidean distance.
+
+AutoAnalyzer's hot spot is the repeated re-clustering done by the
+dissimilarity search (Algorithm 2): one simplified-OPTICS pass per code
+region per search step, each pass dominated by the m x m distance matrix
+over per-process performance vectors.
+
+The kernel uses the classic decomposition
+
+    D[i, j] = ||x_i||^2 + ||x_j||^2 - 2 <x_i, x_j>
+
+so the inner product matrix X @ X^T is a single MXU-shaped matmul
+(bfloat16/f32 systolic pass on real TPU); the norm broadcast + clamp are
+VPU elementwise work. BlockSpec tiles rows of X into VMEM; at the shapes
+AutoAnalyzer needs (M <= 128 processes, N <= 256 regions) a single block
+suffices, but the grid form is kept so larger fleets tile cleanly.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpret path lowers to plain HLO, which is what the
+rust runtime loads (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile used when M exceeds a single block. 128 matches the MXU lane
+# width; smaller inputs fall back to one block covering the whole matrix.
+_TILE_M = 128
+
+
+def _pairwise_kernel(x_ref, xt_ref, o_ref):
+    """One (tile_i, tile_j) block of D = |x_i|^2 + |x_j|^2 - 2 X X^T."""
+    x = x_ref[...]  # (tm, N) rows i
+    y = xt_ref[...]  # (tn, N) rows j
+    # MXU: Gram block. Accumulate in f32 regardless of input dtype.
+    g = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    ni = jnp.sum(x.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (tm,1)
+    nj = jnp.sum(y.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (tn,1)
+    d2 = ni + nj.T - 2.0 * g
+    # Numerical floor: exact-duplicate rows can go epsilon-negative.
+    o_ref[...] = jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def pairwise_sq_dists(x: jax.Array, tile_m: int = _TILE_M) -> jax.Array:
+    """Squared pairwise distances via the Pallas kernel.
+
+    x: (M, N) float32 performance matrix (one row per process/thread,
+       one column per code region metric).
+    returns: (M, M) float32, D[i,j] = ||x_i - x_j||^2, D >= 0.
+    """
+    m, _n = x.shape
+    tm = min(tile_m, m)
+    if m % tm != 0:  # ragged fleets: single block (AOT buckets are aligned)
+        tm = m
+    grid = (m // tm, m // tm)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, x.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, x.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tm), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, x)
+
+
+def pairwise_dists(x: jax.Array) -> jax.Array:
+    """Euclidean (not squared) distances; what Algorithm 1 consumes."""
+    return jnp.sqrt(pairwise_sq_dists(x))

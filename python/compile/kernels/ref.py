@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Kept deliberately naive and allocation-happy: the point is obvious
+correctness, not speed. python/tests/ sweeps shapes and dtypes with
+hypothesis and asserts allclose between these and the kernels; the same
+reference semantics are re-implemented natively in rust/src/cluster/ so
+the rust test-suite can cross-check the PJRT path against the identical
+maths.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x):
+    """D[i,j] = ||x_i - x_j||^2 computed the O(M^2 N) obvious way."""
+    diff = x[:, None, :].astype(jnp.float32) - x[None, :, :].astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pairwise_dists_ref(x):
+    return jnp.sqrt(pairwise_sq_dists_ref(x))
+
+
+def kmeans_step_ref(points, mask, centroids):
+    """Masked 1-D k-means step: nearest-centroid assign, masked-mean update."""
+    pts = points.astype(jnp.float32)
+    d2 = (pts[:, None] - centroids[None, :]) ** 2
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]) * mask[:, None]
+    wsum = jnp.sum(onehot * pts[:, None], axis=0)
+    wcnt = jnp.sum(onehot, axis=0)
+    newc = jnp.where(wcnt > 0, wsum / jnp.maximum(wcnt, 1.0), centroids)
+    return newc, assign
+
+
+def kmeans_ref(points, mask, centroids, iters):
+    """Fixed-iteration k-means; mirrors model.kmeans_cluster."""
+    cent = centroids
+    assign = jnp.zeros(points.shape, dtype=jnp.int32)
+    for _ in range(iters):
+        cent, assign = kmeans_step_ref(points, mask, cent)
+    d2 = (points.astype(jnp.float32)[:, None] - cent[None, :]) ** 2
+    inertia = jnp.sum(jnp.min(d2, axis=1) * mask)
+    return cent, assign, inertia

@@ -1,0 +1,69 @@
+"""L2: AutoAnalyzer's clustering compute graph in JAX.
+
+Two AOT entry points, both calling the L1 Pallas kernels so they lower
+into the same HLO module the rust runtime executes:
+
+  pairwise_dists_masked -- the distance matrix consumed by the
+      simplified-OPTICS clustering (Algorithm 1) and by Algorithm 2's
+      re-clustering loop. Row mask handles bucket padding.
+
+  kmeans_cluster -- fixed-iteration masked 1-D k-means (k = 5 severity
+      bands, Section 4.2.2 / 4.4.2). Iteration count is baked at lower
+      time (KMEANS_ITERS); rust reads the returned inertia if it wants a
+      convergence signal.
+
+Everything is shape-static: aot.py lowers each entry point once per
+bucket shape and the rust runtime pads inputs up to the nearest bucket.
+Python never runs at analysis time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pairwise import pairwise_sq_dists
+from compile.kernels.kmeans import kmeans_step
+
+KMEANS_ITERS = 32
+SEVERITY_K = 5  # very low, low, medium, high, very high
+
+
+def pairwise_dists_masked(x, mask):
+    """Euclidean distance matrix with padded rows pushed to a sentinel.
+
+    x: (M, N) f32, mask: (M,) f32 row validity.
+    returns (M, M) f32: D[i,j] for valid pairs; a large sentinel (1e30)
+    wherever either row is padding, so density counts in rust can simply
+    compare against the OPTICS threshold without special-casing pads.
+    """
+    d = jnp.sqrt(pairwise_sq_dists(x))
+    # The Gram decomposition cancels catastrophically on the diagonal
+    # (||x||^2 + ||x||^2 - 2||x||^2); force exact zeros there.
+    m = x.shape[0]
+    eye = jnp.eye(m, dtype=jnp.bool_)
+    d = jnp.where(eye, 0.0, d)
+    valid = mask[:, None] * mask[None, :]
+    return jnp.where(valid > 0, d, jnp.float32(1e30))
+
+
+def kmeans_cluster(points, mask, init_centroids):
+    """KMEANS_ITERS fused Pallas steps; returns (centroids, assign, inertia).
+
+    points: (R,) f32, mask: (R,) f32, init_centroids: (K,) f32.
+    Assignments for padded slots are meaningless (weight 0); inertia is
+    masked. lax.fori_loop keeps the HLO small (no 32x unroll).
+    """
+
+    def body(_, carry):
+        cent, _assign = carry
+        newc, assign = kmeans_step(points, mask, cent)
+        return newc, assign
+
+    init_assign = jnp.zeros(points.shape, dtype=jnp.int32)
+    cent, assign = jax.lax.fori_loop(
+        0, KMEANS_ITERS, body, (init_centroids, init_assign)
+    )
+    d2 = (points[:, None] - cent[None, :]) ** 2
+    inertia = jnp.sum(jnp.min(d2, axis=1) * mask)
+    return cent, assign, inertia

@@ -1,0 +1,54 @@
+"""AOT artifact pipeline: HLO text emission + manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_lowered_pairwise_is_hlo_text():
+    text = aot.lower_pairwise(8, 32)
+    assert "HloModule" in text
+    assert "f32[8,32]" in text
+
+
+def test_lowered_kmeans_has_tuple_outputs():
+    text = aot.lower_kmeans(16, 5)
+    assert "HloModule" in text
+    # centroids f32[5], assignments s32[16], inertia f32[] in the root tuple
+    assert "s32[16]" in text
+    assert "f32[5]" in text
+
+
+def test_manifest_matches_artifacts_dir():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built; run `make artifacts`")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["kmeans_iters"] == model.KMEANS_ITERS
+    assert manifest["severity_k"] == model.SEVERITY_K
+    for entry in manifest["entries"]:
+        path = os.path.join(art, entry["file"])
+        assert os.path.exists(path), f"missing artifact {entry['file']}"
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+        if entry["entry"] == "pairwise":
+            assert f"f32[{entry['m']},{entry['n']}]" in head
+    kinds = {e["entry"] for e in manifest["entries"]}
+    assert kinds == {"pairwise", "kmeans"}
+
+
+def test_bucket_shapes_cover_paper_scales():
+    # 8 procs x 14 regions (ST) must fit the smallest buckets.
+    assert any(m >= 8 for m in aot.PAIRWISE_M)
+    assert any(n >= 21 for n in aot.PAIRWISE_N)
+    assert any(r >= 21 for r in aot.KMEANS_R)

@@ -1,0 +1,97 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal.
+
+Hypothesis sweeps shapes and value ranges; every Pallas kernel result
+must match the pure-jnp oracle in ref.py. interpret=True everywhere
+(CPU), mirroring what the AOT artifacts execute through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kmeans import kmeans_step
+from compile.kernels.pairwise import pairwise_sq_dists
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_matrix(rng, m, n, scale):
+    return (rng.standard_normal((m, n)) * scale).astype(np.float32)
+
+
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(1, 40),
+    scale=st.sampled_from([1.0, 100.0, 1e4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(m, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_matrix(rng, m, n, scale)
+    got = np.asarray(pairwise_sq_dists(jnp.array(x)))
+    want = np.asarray(ref.pairwise_sq_dists_ref(jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * scale)
+
+
+@given(m=st.integers(2, 16), n=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_pairwise_properties(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_matrix(rng, m, n, 10.0)
+    d = np.asarray(pairwise_sq_dists(jnp.array(x)))
+    assert d.shape == (m, m)
+    assert (d >= 0).all(), "squared distances are non-negative"
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-5)
+
+
+def test_pairwise_duplicate_rows_zero_distance():
+    x = jnp.array(np.ones((4, 8), np.float32) * 37.5)
+    d = np.asarray(pairwise_sq_dists(x))
+    np.testing.assert_allclose(d, np.zeros((4, 4)), atol=1e-2)
+
+
+@given(
+    r=st.integers(1, 64),
+    k=st.integers(2, 5),
+    pad=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_step_matches_ref(r, k, pad, seed):
+    rng = np.random.default_rng(seed)
+    pts = np.concatenate(
+        [rng.random(r).astype(np.float32), np.zeros(pad, np.float32)]
+    )
+    mask = np.concatenate([np.ones(r, np.float32), np.zeros(pad, np.float32)])
+    cent = np.sort(rng.random(k).astype(np.float32))
+    newc, assign = kmeans_step(jnp.array(pts), jnp.array(mask), jnp.array(cent))
+    refc, refa = ref.kmeans_step_ref(jnp.array(pts), jnp.array(mask), jnp.array(cent))
+    np.testing.assert_allclose(np.asarray(newc), np.asarray(refc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(assign)[:r], np.asarray(refa)[:r])
+
+
+def test_kmeans_padding_has_zero_weight():
+    pts = jnp.array([0.1, 0.9, 555.0, 555.0], jnp.float32)  # last two padded
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    cent = jnp.array([0.0, 0.25, 0.5, 0.75, 1.0], jnp.float32)
+    newc, _ = kmeans_step(pts, mask, cent)
+    assert float(jnp.max(newc)) <= 1.0, "padded points must not move centroids"
+
+
+def test_kmeans_empty_cluster_keeps_centroid():
+    pts = jnp.array([0.1, 0.11], jnp.float32)
+    mask = jnp.ones(2, jnp.float32)
+    cent = jnp.array([0.1, 0.5, 0.6, 0.7, 0.9], jnp.float32)
+    newc, assign = kmeans_step(pts, mask, cent)
+    # Clusters 1..4 are empty and keep their original centroids.
+    np.testing.assert_allclose(np.asarray(newc)[1:], np.asarray(cent)[1:])
+    assert set(np.asarray(assign).tolist()) == {0}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_pairwise_dtype(dtype):
+    x = jnp.zeros((4, 4), dtype)
+    d = pairwise_sq_dists(x)
+    assert d.dtype == jnp.float32

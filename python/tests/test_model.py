@@ -1,0 +1,68 @@
+"""L2 model graph: masking semantics + fixed-iteration k-means vs ref."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(m=st.integers(2, 16), n=st.integers(1, 24), valid=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_pairwise(m, n, valid, seed):
+    valid = min(valid, m)
+    rng = np.random.default_rng(seed)
+    x = (rng.random((m, n)) * 50).astype(np.float32)
+    mask = np.zeros(m, np.float32)
+    mask[:valid] = 1.0
+    d = np.asarray(model.pairwise_dists_masked(jnp.array(x), jnp.array(mask)))
+    want = np.asarray(ref.pairwise_dists_ref(jnp.array(x[:valid])))
+    np.testing.assert_allclose(d[:valid, :valid], want, rtol=1e-4, atol=1e-3)
+    # Padded rows/cols carry the sentinel.
+    if valid < m:
+        assert (d[valid:, :] > 1e29).all()
+        assert (d[:, valid:] > 1e29).all()
+
+
+def test_masked_pairwise_diagonal_zero():
+    x = jnp.array(np.random.default_rng(0).random((6, 5)), jnp.float32)
+    mask = jnp.ones(6, jnp.float32)
+    d = np.asarray(model.pairwise_dists_masked(x, mask))
+    np.testing.assert_allclose(np.diag(d), np.zeros(6), atol=0)
+
+
+@given(r=st.integers(2, 32), pad=st.integers(0, 8), seed=st.integers(0, 2**31 - 1))
+def test_kmeans_cluster_matches_ref(r, pad, seed):
+    rng = np.random.default_rng(seed)
+    pts = np.concatenate([
+        rng.random(r).astype(np.float32),
+        np.zeros(pad, np.float32),
+    ])
+    mask = np.concatenate([np.ones(r, np.float32), np.zeros(pad, np.float32)])
+    init = np.linspace(0.0, 1.0, model.SEVERITY_K).astype(np.float32)
+    cent, assign, inertia = model.kmeans_cluster(
+        jnp.array(pts), jnp.array(mask), jnp.array(init)
+    )
+    rc, ra, ri = ref.kmeans_ref(
+        jnp.array(pts), jnp.array(mask), jnp.array(init), model.KMEANS_ITERS
+    )
+    np.testing.assert_allclose(np.asarray(cent), np.asarray(rc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(assign)[:r], np.asarray(ra)[:r])
+    np.testing.assert_allclose(float(inertia), float(ri), rtol=1e-4, atol=1e-6)
+
+
+def test_kmeans_inertia_nonincreasing_refinement():
+    # Running the fixed-point longer never increases masked inertia.
+    rng = np.random.default_rng(3)
+    pts = jnp.array(rng.random(24), jnp.float32)
+    mask = jnp.ones(24, jnp.float32)
+    init = jnp.array(np.linspace(0, 1, 5), jnp.float32)
+    _, _, i_full = model.kmeans_cluster(pts, mask, init)
+    cent1, _ = ref.kmeans_step_ref(pts, mask, init)
+    d2 = (pts[:, None] - cent1[None, :]) ** 2
+    i_one = float(jnp.sum(jnp.min(d2, axis=1)))
+    assert float(i_full) <= i_one + 1e-6

@@ -1,0 +1,37 @@
+//! `cargo bench --bench paper_experiments` — regenerates every table
+//! and figure of the paper's §6 (DESIGN.md §4), printing the rows the
+//! paper reports and timing each regeneration. A failed shape assertion
+//! fails the bench: this is the reproduction's regression harness.
+
+use autoanalyzer::cluster::backend::select_backend;
+use autoanalyzer::eval::bench::Bench;
+use autoanalyzer::eval::EXPERIMENTS;
+
+fn main() {
+    let backend = select_backend("auto", "artifacts").expect("backend");
+    println!(
+        "== paper experiment regeneration (backend: {}) ==\n",
+        backend.name()
+    );
+    let mut bench = Bench::new("paper_experiments");
+    let mut failures = 0;
+    for e in EXPERIMENTS {
+        match (e.run)(backend.as_ref()) {
+            Ok(out) => {
+                println!("==================== {} :: {} ====================", e.id, e.paper);
+                println!("{out}");
+                // Time the regeneration (the output already printed once).
+                bench.run(e.id, || (e.run)(backend.as_ref()).map(|s| s.len()).unwrap_or(0));
+            }
+            Err(err) => {
+                failures += 1;
+                println!("EXPERIMENT {} FAILED: {err:#}", e.id);
+            }
+        }
+    }
+    println!("{}", bench.report());
+    if failures > 0 {
+        eprintln!("{failures} experiment(s) failed");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,63 @@
+//! `cargo bench --bench perf_clustering` — the clustering hot path:
+//! native vs PJRT pairwise distances and severity k-means across the
+//! artifact bucket sizes, plus simplified-OPTICS end-to-end. This is
+//! the L1/L3 perf deliverable's measurement harness (EXPERIMENTS.md
+//! §Perf).
+
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend, PjrtBackend};
+use autoanalyzer::eval::bench::Bench;
+use autoanalyzer::util::matrix::Matrix;
+use autoanalyzer::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+    let rows: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..n).map(|_| rng.range_f64(0.0, 1000.0) as f32).collect())
+        .collect();
+    Matrix::from_rows(&rows)
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBEEF);
+    let native = NativeBackend;
+    let pjrt = PjrtBackend::load("artifacts").ok();
+    if pjrt.is_none() {
+        eprintln!("note: artifacts/ missing — PJRT cases skipped (run `make artifacts`)");
+    }
+
+    let mut bench = Bench::new("perf_clustering");
+
+    // Pairwise distances at paper scale (8x14) and bucket scales.
+    for (m, n) in [(8usize, 14usize), (16, 32), (64, 64), (128, 128)] {
+        let x = random_matrix(&mut rng, m, n);
+        bench.run(&format!("pairwise {m}x{n} native"), || {
+            native.pairwise_dists(&x).unwrap()
+        });
+        if let Some(p) = &pjrt {
+            bench.run(&format!("pairwise {m}x{n} pjrt"), || {
+                p.pairwise_dists(&x).unwrap()
+            });
+        }
+    }
+
+    // Severity k-means at region-count scales.
+    for r in [14usize, 64, 256] {
+        let pts: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        bench.run(&format!("kmeans5 r={r} native"), || {
+            native.severity_kmeans(&pts).unwrap()
+        });
+        if let Some(p) = &pjrt {
+            bench.run(&format!("kmeans5 r={r} pjrt"), || {
+                p.severity_kmeans(&pts).unwrap()
+            });
+        }
+    }
+
+    // Full OPTICS (distance + clustering) at paper scale.
+    let x = random_matrix(&mut rng, 8, 14);
+    bench.run("optics 8x14 native", || native.simplified_optics(&x).unwrap());
+    if let Some(p) = &pjrt {
+        bench.run("optics 8x14 pjrt", || p.simplified_optics(&x).unwrap());
+    }
+
+    println!("{}", bench.report());
+}

@@ -1,0 +1,82 @@
+//! `cargo bench --bench perf_coordinator` — analysis-service throughput
+//! scaling across worker counts (the L3 perf deliverable).
+
+use std::time::Instant;
+
+use autoanalyzer::analysis::pipeline::AnalysisConfig;
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::util::stats::percentile;
+use autoanalyzer::util::tables::Table;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn make_traces(n: u64) -> Vec<Trace> {
+    (0..n)
+        .map(|i| {
+            let inj = match i % 4 {
+                0 => vec![(2usize, Inject::Imbalance)],
+                1 => vec![(3usize, Inject::DiskHog)],
+                2 => vec![(4usize, Inject::CacheThrash)],
+                _ => vec![],
+            };
+            simulate(&synthetic(8, 12, &inj, i), i)
+        })
+        .collect()
+}
+
+fn run(workers: usize, traces: &[Trace]) -> (f64, f64, f64) {
+    let (coord, rx) = Coordinator::start(workers, 32, || {
+        Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
+    });
+    let start = Instant::now();
+    for (i, t) in traces.iter().enumerate() {
+        coord.submit(AnalysisJob {
+            id: i as u64,
+            trace: t.clone(),
+            config: AnalysisConfig::default(),
+        });
+    }
+    let mut lat = Vec::new();
+    for _ in 0..traces.len() {
+        let o = rx.recv().expect("outcome");
+        assert!(o.error.is_none(), "{:?}", o.error);
+        lat.push(o.latency.as_secs_f64());
+    }
+    let wall = start.elapsed().as_secs_f64();
+    coord.shutdown();
+    (
+        traces.len() as f64 / wall,
+        percentile(&lat, 50.0) * 1e3,
+        percentile(&lat, 99.0) * 1e3,
+    )
+}
+
+fn main() {
+    let n: u64 = if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+        32
+    } else {
+        192
+    };
+    let traces = make_traces(n);
+    let mut t = Table::new(
+        &format!("perf_coordinator — {n} jobs (8p x 12r synthetic)"),
+        &["workers", "jobs/s", "p50 (ms)", "p99 (ms)", "scaling"],
+    );
+    let mut base = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let (thr, p50, p99) = run(workers, &traces);
+        if workers == 1 {
+            base = thr;
+        }
+        t.row(&[
+            workers.to_string(),
+            format!("{thr:.1}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{:.2}x", thr / base),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,84 @@
+//! `cargo bench --bench perf_pipeline` — end-to-end pipeline costs:
+//! simulation, Algorithm 2 (the recluster-heavy search), disparity
+//! analysis, rough-set reduction, trace codecs, and the complete
+//! `analyze` on each paper workload.
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::analysis::rootcause::{disparity_root_cause, dissimilarity_root_cause};
+use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::eval::bench::Bench;
+use autoanalyzer::metrics::{Metric, MetricView};
+use autoanalyzer::search::{disparity_search, dissimilarity_search};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::json_codec;
+use autoanalyzer::workloads::npar1way::{npar1way, NparParams};
+use autoanalyzer::workloads::st::{st_coarse, StParams};
+use autoanalyzer::workloads::st_fine::st_fine;
+use autoanalyzer::workloads::{mpibzip2, synthetic};
+
+fn main() {
+    let backend = NativeBackend;
+    let mut bench = Bench::new("perf_pipeline");
+
+    let st_spec = st_coarse(&StParams::default());
+    let st = simulate(&st_spec, 2011);
+    let fine = simulate(&st_fine(&StParams::default()), 2011);
+    let npar = simulate(&npar1way(&NparParams::default()), 2011);
+    let bzip = simulate(&mpibzip2::mpibzip2(), 2011);
+    let big = simulate(
+        &synthetic::synthetic(32, 48, &[(5, synthetic::Inject::Imbalance)], 3),
+        3,
+    );
+
+    bench.run("simulate st (8p x 14r)", || simulate(&st_spec, 2011));
+    bench.run("dissimilarity search st", || {
+        dissimilarity_search(&st, &backend, MetricView::Plain(Metric::CpuClock)).unwrap()
+    });
+    bench.run("dissimilarity search 32p x 48r", || {
+        dissimilarity_search(&big, &backend, MetricView::Plain(Metric::CpuClock)).unwrap()
+    });
+    bench.run("disparity search st", || {
+        disparity_search(&st, &backend, MetricView::Crnm).unwrap()
+    });
+    let decision = backend
+        .simplified_optics(&autoanalyzer::metrics::perf_matrix(
+            &st,
+            MetricView::Plain(Metric::CpuClock),
+        ))
+        .unwrap();
+    bench.run("rough set dissimilarity st", || {
+        dissimilarity_root_cause(&st, &backend, &decision).unwrap()
+    });
+    let ccrs: Vec<_> = disparity_search(&st, &backend, MetricView::Crnm)
+        .unwrap()
+        .ccrs;
+    bench.run("rough set disparity st", || {
+        disparity_root_cause(&st, &backend, &ccrs).unwrap()
+    });
+    bench.run("analyze st full", || {
+        analyze(&st, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("analyze st-fine full", || {
+        analyze(&fine, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("analyze npar1way full", || {
+        analyze(&npar, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("analyze mpibzip2 full", || {
+        analyze(&bzip, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("analyze 32p x 48r full", || {
+        analyze(&big, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("trace json encode st", || json_codec::to_json(&st).pretty());
+    let encoded = json_codec::to_json(&st).pretty();
+    bench.run("trace json decode st", || {
+        json_codec::from_json(&autoanalyzer::util::json::Json::parse(&encoded).unwrap())
+            .unwrap()
+    });
+
+    println!("{}", bench.report());
+
+    use autoanalyzer::cluster::ClusterBackend as _;
+    let _ = backend.name();
+}

@@ -1,0 +1,16 @@
+//! The AutoAnalyzer analysis layer (paper Fig. 6, §4.4).
+//!
+//! - `rootcause`: builds the two decision tables of §4.4.2 and extracts
+//!   root causes via the rough set engine;
+//! - `pipeline`: the end-to-end flow — existence tests, bottleneck
+//!   searches, root-cause analysis — over a trace and a
+//!   `ClusterBackend`;
+//! - `report`: renders the combined findings the way the paper's
+//!   figures print them.
+
+pub mod pipeline;
+pub mod report;
+pub mod rootcause;
+
+pub use pipeline::{analyze, AnalysisReport};
+pub use rootcause::{DissimilarityRootCause, DisparityRootCause};

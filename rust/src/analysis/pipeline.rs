@@ -1,0 +1,111 @@
+//! The end-to-end AutoAnalyzer pipeline (paper Fig. 6).
+//!
+//! trace → (1) dissimilarity existence + Algorithm 2 search on CPU
+//! clock time → (2) disparity severity clustering + refinement on CRNM
+//! → (3) rough-set root causes for whichever bottleneck kinds exist.
+
+use anyhow::Result;
+
+use crate::analysis::rootcause::{
+    dissimilarity_root_cause, disparity_root_cause, DissimilarityRootCause,
+    DisparityRootCause,
+};
+use crate::cluster::ClusterBackend;
+use crate::metrics::{Metric, MetricView};
+use crate::search::{disparity_search, dissimilarity_search, DisparityResult, DissimilarityResult};
+use crate::trace::Trace;
+
+/// Everything AutoAnalyzer concluded about one run.
+#[derive(Debug)]
+pub struct AnalysisReport {
+    pub program: String,
+    pub nprocs: usize,
+    pub nregions: usize,
+    pub run_wall: f64,
+    pub dissimilarity: DissimilarityResult,
+    pub dissimilarity_causes: Option<DissimilarityRootCause>,
+    pub disparity: DisparityResult,
+    pub disparity_causes: Option<DisparityRootCause>,
+    /// Which backend computed the clusterings ("native" | "pjrt").
+    pub backend: &'static str,
+}
+
+/// Metric choices for the two analyses (§6.4 studies alternatives).
+#[derive(Debug, Clone, Copy)]
+pub struct AnalysisConfig {
+    /// Measurement for dissimilarity vectors (paper default: CPU clock).
+    pub dissimilarity_view: MetricView,
+    /// Measurement for disparity ranking (paper default: CRNM).
+    pub disparity_view: MetricView,
+    /// Skip the rough-set stage (used by metric-study benches that
+    /// only compare bottleneck sets).
+    pub root_causes: bool,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> AnalysisConfig {
+        AnalysisConfig {
+            dissimilarity_view: MetricView::Plain(Metric::CpuClock),
+            disparity_view: MetricView::Crnm,
+            root_causes: true,
+        }
+    }
+}
+
+/// Run the full pipeline.
+pub fn analyze(
+    trace: &Trace,
+    backend: &dyn ClusterBackend,
+    config: &AnalysisConfig,
+) -> Result<AnalysisReport> {
+    trace.validate().map_err(anyhow::Error::msg)?;
+
+    let dissimilarity = dissimilarity_search(trace, backend, config.dissimilarity_view)?;
+    let disparity = disparity_search(trace, backend, config.disparity_view)?;
+
+    let dissimilarity_causes = if config.root_causes && dissimilarity.exists() {
+        Some(dissimilarity_root_cause(
+            trace,
+            backend,
+            &dissimilarity.clustering,
+        )?)
+    } else {
+        None
+    };
+    let disparity_causes = if config.root_causes && disparity.exists() {
+        Some(disparity_root_cause(trace, backend, &disparity.ccrs)?)
+    } else {
+        None
+    };
+
+    Ok(AnalysisReport {
+        program: trace.tree.program().to_string(),
+        nprocs: trace.nprocs(),
+        nregions: trace.nregions(),
+        run_wall: trace.run_wall(),
+        dissimilarity,
+        dissimilarity_causes,
+        disparity,
+        disparity_causes,
+        backend: backend.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::st::{st_coarse, StParams};
+
+    #[test]
+    fn pipeline_runs_on_st() {
+        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert_eq!(report.nregions, 14);
+        assert!(report.dissimilarity.exists(), "ST has load imbalance");
+        assert!(report.disparity.exists(), "ST has disparity bottlenecks");
+        assert!(report.dissimilarity_causes.is_some());
+        assert!(report.disparity_causes.is_some());
+    }
+}

@@ -1,0 +1,106 @@
+//! Report rendering: the paper's Fig. 9 / Fig. 12 style output plus the
+//! decision tables and root causes, as one text document.
+
+use crate::analysis::pipeline::AnalysisReport;
+use crate::roughset::boolfn::set_to_names;
+use crate::util::tables::{f4, Table};
+
+impl AnalysisReport {
+    /// Full human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "=== AutoAnalyzer report: {} ({} processes, {} code regions, wall {:.1}s, backend {}) ===\n\n",
+            self.program, self.nprocs, self.nregions, self.run_wall, self.backend
+        ));
+
+        out.push_str("--- dissimilarity analysis (CPU clock time) ---\n");
+        out.push_str(&self.dissimilarity.render());
+        if let Some(rc) = &self.dissimilarity_causes {
+            out.push('\n');
+            out.push_str(&rc.table.render("decision table (dissimilarity)"));
+            out.push_str(&rc.matrix_render);
+            let attr_names: Vec<String> =
+                rc.table.attr_names().to_vec();
+            let reducts: Vec<String> = rc
+                .reducts
+                .iter()
+                .map(|&r| format!("{{{}}}", set_to_names(r, &attr_names).join(",")))
+                .collect();
+            out.push_str(&format!("minimal reducts: {}\n", reducts.join(" or ")));
+            out.push_str(&format!(
+                "root causes: {}\n",
+                rc.cause_names().join(", ")
+            ));
+        }
+
+        out.push_str("\n--- disparity analysis (CRNM) ---\n");
+        let mut crnm = Table::new("average CRNM per code region", &["region", "crnm", "severity"]);
+        for (i, &m) in self.disparity.means.iter().enumerate() {
+            crnm.row(&[
+                (i + 1).to_string(),
+                f4(m),
+                self.disparity.kmeans.severities[i].name().to_string(),
+            ]);
+        }
+        out.push_str(&crnm.render());
+        out.push_str(&self.disparity.render());
+        if let Some(rc) = &self.disparity_causes {
+            out.push('\n');
+            out.push_str(&rc.table.render("decision table (disparity)"));
+            out.push_str(&rc.matrix_render);
+            out.push_str(&format!(
+                "root causes: {}\n",
+                rc.cause_names().join(", ")
+            ));
+            for (region, causes) in &rc.per_bottleneck {
+                out.push_str(&format!(
+                    "  code region {}: {}\n",
+                    region,
+                    if causes.is_empty() {
+                        "no dominant attribute (dominates by time share)".to_string()
+                    } else {
+                        causes.join(", ")
+                    }
+                ));
+            }
+        }
+        out
+    }
+
+    /// One-line summary (used by the coordinator's job log).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: dissimilarity={} (CCCR {:?}), disparity CCR {:?}",
+            self.program,
+            if self.dissimilarity.exists() {
+                format!("{} clusters", self.dissimilarity.clustering.num_clusters())
+            } else {
+                "none".to_string()
+            },
+            self.dissimilarity.cccrs,
+            self.disparity.ccrs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::pipeline::{analyze, AnalysisConfig};
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::st::{st_coarse, StParams};
+
+    #[test]
+    fn report_renders_all_sections() {
+        let trace = simulate(&st_coarse(&StParams::default()), 7);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        let text = report.render();
+        assert!(text.contains("dissimilarity analysis"));
+        assert!(text.contains("disparity analysis"));
+        assert!(text.contains("decision table"));
+        assert!(text.contains("root causes:"));
+        let s = report.summary();
+        assert!(s.contains("ST"));
+    }
+}

@@ -1,0 +1,287 @@
+//! Root-cause analysis via rough sets (paper §4.4.2).
+//!
+//! Dissimilarity: objects = process ranks; attribute a_k's value for
+//! process i is the id of the cluster process i lands in when the
+//! per-region vectors of metric k are clustered with Algorithm 1; the
+//! decision is the CPU-clock cluster id. Disparity: objects = code
+//! regions; attribute a_k is 1 when the region's severity for metric k
+//! exceeds *medium*; the decision is 1 for disparity bottlenecks.
+//!
+//! The "core attributions" the paper reports are the smallest minimal
+//! reducts of the resulting decision tables (its Table 2 worked example
+//! lists {a1,a2} / {a1,a3}); we report those plus the classical core.
+
+use anyhow::Result;
+
+use crate::cluster::kmeans::Severity;
+use crate::cluster::optics::Clustering;
+use crate::cluster::ClusterBackend;
+use crate::metrics::{perf_matrix, region_means, Metric, MetricView};
+use crate::regions::RegionId;
+use crate::roughset::{core_attrs, minimal_reducts, DecisionTable, DiscernMatrix};
+use crate::trace::Trace;
+
+/// Attribute names a1..a5 in the paper's order.
+pub fn attr_names() -> Vec<&'static str> {
+    vec!["a1", "a2", "a3", "a4", "a5"]
+}
+
+/// Human names for a1..a5.
+pub fn attr_meaning(idx: usize) -> &'static str {
+    match idx {
+        0 => "L1 cache miss rate",
+        1 => "L2 cache miss rate",
+        2 => "disk I/O quantity",
+        3 => "network I/O quantity",
+        4 => "instructions retired",
+        _ => "?",
+    }
+}
+
+/// Root causes of dissimilarity bottlenecks.
+#[derive(Debug, Clone)]
+pub struct DissimilarityRootCause {
+    pub table: DecisionTable,
+    /// Classical core attribute indices (bitmask).
+    pub core: u64,
+    /// All minimal reducts (bitmasks), smallest first.
+    pub reducts: Vec<u64>,
+    /// Rendered discernibility matrix (Fig. 10 style).
+    pub matrix_render: String,
+}
+
+/// Root causes of disparity bottlenecks, with per-bottleneck detail.
+#[derive(Debug, Clone)]
+pub struct DisparityRootCause {
+    pub table: DecisionTable,
+    pub core: u64,
+    pub reducts: Vec<u64>,
+    pub matrix_render: String,
+    /// For each bottleneck region: the reduct attributes it is "high"
+    /// in — the paper's "search the decision table" step that says
+    /// region 8 suffers disk I/O while region 11 suffers L2 misses.
+    pub per_bottleneck: Vec<(RegionId, Vec<&'static str>)>,
+}
+
+fn names(set: u64) -> Vec<&'static str> {
+    (0..5).filter(|a| set & (1 << a) != 0).map(attr_meaning).collect()
+}
+
+impl DissimilarityRootCause {
+    /// The paper's chosen "core attributions": the smallest reduct.
+    pub fn chosen_reduct(&self) -> u64 {
+        self.reducts.first().copied().unwrap_or(0)
+    }
+
+    pub fn cause_names(&self) -> Vec<&'static str> {
+        names(self.chosen_reduct())
+    }
+}
+
+impl DisparityRootCause {
+    pub fn chosen_reduct(&self) -> u64 {
+        self.reducts.first().copied().unwrap_or(0)
+    }
+
+    pub fn cause_names(&self) -> Vec<&'static str> {
+        names(self.chosen_reduct())
+    }
+}
+
+/// Build the dissimilarity decision table (Fig. 4) and extract causes.
+///
+/// `decision`: the CPU-clock-time clustering of the processes (the
+/// dissimilarity existence result).
+pub fn dissimilarity_root_cause(
+    trace: &Trace,
+    backend: &dyn ClusterBackend,
+    decision: &Clustering,
+) -> Result<DissimilarityRootCause> {
+    let mut table = DecisionTable::new(&attr_names());
+    // Attribute value = cluster id of the process under metric k.
+    let mut attr_clusters: Vec<Clustering> = Vec::new();
+    for metric in Metric::rough_set_attrs() {
+        let x = perf_matrix(trace, MetricView::Plain(metric));
+        attr_clusters.push(backend.simplified_optics(&x)?);
+    }
+    for p in 0..trace.nprocs() {
+        let conditions: Vec<u32> = attr_clusters
+            .iter()
+            .map(|c| c.cluster_of(p) as u32)
+            .collect();
+        table.push(&p.to_string(), conditions, decision.cluster_of(p) as u32);
+    }
+    let matrix = DiscernMatrix::build(&table);
+    Ok(DissimilarityRootCause {
+        core: core_attrs(&matrix),
+        reducts: minimal_reducts(&matrix, table.num_attrs()),
+        matrix_render: matrix.render("discernibility matrix (dissimilarity)"),
+        table,
+    })
+}
+
+/// Build the disparity decision table (Fig. 5) and extract causes.
+///
+/// `bottlenecks`: the disparity CCR set.
+pub fn disparity_root_cause(
+    trace: &Trace,
+    backend: &dyn ClusterBackend,
+    bottlenecks: &[RegionId],
+) -> Result<DisparityRootCause> {
+    let mut table = DecisionTable::new(&attr_names());
+    // Attribute value = 1 if the region's severity for metric k is
+    // above medium.
+    let mut attr_high: Vec<Vec<bool>> = Vec::new();
+    for metric in Metric::rough_set_attrs() {
+        let means = region_means(trace, MetricView::Plain(metric));
+        let points: Vec<f32> = means.iter().map(|&m| m as f32).collect();
+        let km = backend.severity_kmeans(&points)?;
+        attr_high.push(
+            km.severities
+                .iter()
+                .map(|&s| s > Severity::Medium)
+                .collect(),
+        );
+    }
+    for r in trace.tree.region_ids() {
+        let conditions: Vec<u32> = attr_high
+            .iter()
+            .map(|col| col[r.0 - 1] as u32)
+            .collect();
+        let d = bottlenecks.contains(&r) as u32;
+        table.push(&r.to_string(), conditions, d);
+    }
+    let matrix = DiscernMatrix::build(&table);
+    let core = core_attrs(&matrix);
+    let reducts = minimal_reducts(&matrix, table.num_attrs());
+    let chosen = reducts.first().copied().unwrap_or(0);
+
+    // Per-bottleneck attribution: which chosen-reduct attributes is the
+    // region high in?
+    let mut per_bottleneck = Vec::new();
+    for &b in bottlenecks {
+        let causes: Vec<&'static str> = (0..5)
+            .filter(|&a| chosen & (1 << a) != 0 && attr_high[a][b.0 - 1])
+            .map(attr_meaning)
+            .collect();
+        per_bottleneck.push((b, causes));
+    }
+
+    Ok(DisparityRootCause {
+        core,
+        reducts,
+        matrix_render: matrix.render("discernibility matrix (disparity)"),
+        table,
+        per_bottleneck,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::regions::RegionTree;
+
+    /// Synthetic trace shaped like the paper's story: region 2 is a
+    /// disk hog (bottleneck), region 3 an instruction hog (bottleneck),
+    /// regions 1/4/5 quiet.
+    fn trace() -> Trace {
+        let mut tree = RegionTree::new("rc");
+        for n in ["a", "b", "c", "d", "e"] {
+            tree.add(RegionId(0), n);
+        }
+        let mut t = Trace::new(tree, 4);
+        for p in 0..4 {
+            t.sample_mut(p, RegionId(0)).wall = 100.0;
+            for r in 1..=5 {
+                let s = t.sample_mut(p, RegionId(r));
+                s.wall = 10.0;
+                s.cpu = 8.0;
+                s.instructions = 1e9;
+                s.cycles = 1e9;
+                s.l1_access = 1e8;
+                s.l1_miss = 1e6;
+                s.l2_access = 1e6;
+                s.l2_miss = 1e4;
+                s.disk_bytes = 1e6;
+                s.mpi_bytes = 1e5;
+            }
+            // Region 2: disk hog.
+            t.sample_mut(p, RegionId(2)).disk_bytes = 5e10;
+            // Region 3: instruction hog.
+            t.sample_mut(p, RegionId(3)).instructions = 9e12;
+        }
+        t
+    }
+
+    #[test]
+    fn disparity_causes_point_at_disk_and_instructions() {
+        let t = trace();
+        let bottlenecks = vec![RegionId(2), RegionId(3)];
+        let rc = disparity_root_cause(&t, &NativeBackend, &bottlenecks).unwrap();
+        let causes = rc.cause_names();
+        assert!(
+            causes.contains(&"disk I/O quantity"),
+            "causes {causes:?}\n{}",
+            rc.table.render("t")
+        );
+        assert!(causes.contains(&"instructions retired"), "causes {causes:?}");
+        // Per-bottleneck attribution.
+        let r2 = rc
+            .per_bottleneck
+            .iter()
+            .find(|(r, _)| *r == RegionId(2))
+            .unwrap();
+        assert_eq!(r2.1, vec!["disk I/O quantity"]);
+        let r3 = rc
+            .per_bottleneck
+            .iter()
+            .find(|(r, _)| *r == RegionId(3))
+            .unwrap();
+        assert_eq!(r3.1, vec!["instructions retired"]);
+    }
+
+    #[test]
+    fn dissimilarity_cause_follows_the_varying_metric() {
+        // Processes differ ONLY in instructions (and hence cpu time).
+        let mut tree = RegionTree::new("rc2");
+        tree.add(RegionId(0), "hot");
+        tree.add(RegionId(0), "cold");
+        let mut t = Trace::new(tree, 4);
+        for p in 0..4 {
+            t.sample_mut(p, RegionId(0)).wall = 100.0;
+            let hot = t.sample_mut(p, RegionId(1));
+            let load = if p < 2 { 1.0 } else { 3.0 };
+            hot.cpu = 100.0 * load;
+            hot.instructions = 1e12 * load;
+            hot.cycles = 1e12 * load;
+            hot.l1_access = 1e10 * load;
+            hot.l1_miss = 1e8 * load; // rate constant
+            hot.l2_access = 1e8 * load;
+            hot.l2_miss = 1e6 * load;
+            let cold = t.sample_mut(p, RegionId(2));
+            cold.cpu = 50.0;
+            cold.instructions = 1e11;
+            cold.cycles = 1e11;
+        }
+        let x = perf_matrix(&t, MetricView::Plain(Metric::CpuClock));
+        let decision = NativeBackend.simplified_optics(&x).unwrap();
+        assert_eq!(decision.num_clusters(), 2);
+        let rc = dissimilarity_root_cause(&t, &NativeBackend, &decision).unwrap();
+        assert!(
+            rc.cause_names().contains(&"instructions retired"),
+            "causes {:?}\n{}",
+            rc.cause_names(),
+            rc.table.render("t")
+        );
+    }
+
+    #[test]
+    fn renders_tables() {
+        let t = trace();
+        let rc = disparity_root_cause(&t, &NativeBackend, &[RegionId(2)]).unwrap();
+        let rendered = rc.table.render("Table 4");
+        assert!(rendered.contains("| ID | a1 | a2 | a3 | a4 | a5 | D |"));
+        assert!(rc.matrix_render.contains("discernibility"));
+    }
+}

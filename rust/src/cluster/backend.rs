@@ -1,0 +1,137 @@
+//! `ClusterBackend` — one interface, two engines.
+//!
+//! The analysis pipeline asks for distance matrices and severity
+//! clusterings through this trait. `NativeBackend` computes them in
+//! rust; `PjrtBackend` executes the AOT JAX/Pallas artifacts through
+//! the PJRT runtime (the production path — python never runs). The
+//! integration tests assert both give the same clusterings.
+
+use anyhow::Result;
+
+use crate::cluster::kmeans::{self, KmeansResult};
+use crate::cluster::optics::{self, Clustering};
+use crate::runtime::PjrtRuntime;
+use crate::util::matrix::Matrix;
+
+pub trait ClusterBackend {
+    /// Euclidean distance matrix over the rows of `x`.
+    fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix>;
+
+    /// Five-band severity clustering of 1-D points.
+    fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult>;
+
+    /// Algorithm 1 over performance vectors, using this backend's
+    /// distance matrix.
+    fn simplified_optics(&self, x: &Matrix) -> Result<Clustering> {
+        let d = self.pairwise_dists(x)?;
+        Ok(optics::simplified_optics_with(x, &d, 1))
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl ClusterBackend for NativeBackend {
+    fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        Ok(crate::cluster::distance::pairwise_dists(x))
+    }
+
+    fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
+        Ok(kmeans::severity_kmeans(points))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend executing the AOT artifacts.
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: PjrtRuntime) -> PjrtBackend {
+        PjrtBackend { runtime }
+    }
+
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> Result<PjrtBackend> {
+        let runtime = PjrtRuntime::load(artifact_dir)?;
+        anyhow::ensure!(
+            runtime.kmeans_iters == kmeans::KMEANS_ITERS,
+            "artifact kmeans_iters={} != crate KMEANS_ITERS={}; re-run make artifacts",
+            runtime.kmeans_iters,
+            kmeans::KMEANS_ITERS
+        );
+        Ok(PjrtBackend { runtime })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+}
+
+impl ClusterBackend for PjrtBackend {
+    fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        self.runtime.pairwise_dists(x)
+    }
+
+    fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
+        let init = kmeans::farthest_point_init(points);
+        let out = self.runtime.kmeans5(points, &init)?;
+        let mut res = kmeans::to_severities(&out.centroids, &out.assignments);
+        res.inertia = out.inertia;
+        Ok(res)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Select a backend by name ("native" | "pjrt"), falling back to native
+/// with a warning when artifacts are missing (so examples run before
+/// `make artifacts`).
+pub fn select_backend(name: &str, artifact_dir: &str) -> Result<Box<dyn ClusterBackend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend)),
+        "pjrt" => Ok(Box::new(PjrtBackend::load(artifact_dir)?)),
+        "auto" => match PjrtBackend::load(artifact_dir) {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => {
+                eprintln!(
+                    "warning: PJRT artifacts unavailable ({e}); using native backend"
+                );
+                Ok(Box::new(NativeBackend))
+            }
+        },
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt|auto)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_distances() {
+        let x = Matrix::from_rows(&[vec![0.0, 0.0], vec![3.0, 4.0]]);
+        let d = NativeBackend.pairwise_dists(&x).unwrap();
+        assert_eq!(d[(0, 1)], 5.0);
+    }
+
+    #[test]
+    fn native_backend_optics_via_trait() {
+        let x = Matrix::from_rows(&[vec![1.0, 1.0], vec![1.001, 1.0], vec![9.0, 9.0]]);
+        let c = NativeBackend.simplified_optics(&x).unwrap();
+        assert_eq!(c.num_clusters(), 2);
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        assert!(select_backend("gpu", "artifacts").is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Native pairwise Euclidean distances — the reference implementation
+//! the PJRT path is validated against (mirrors
+//! `python/compile/kernels/ref.py`).
+
+use crate::util::matrix::Matrix;
+
+/// Full distance matrix: D[i][j] = ||x_i - x_j||, D[i][i] = 0.
+/// f64 accumulation, f32 storage (matches the artifact's f32 output to
+/// ~1e-5 at the paper's scales; integration tests assert the tolerance).
+pub fn pairwise_dists(x: &Matrix) -> Matrix {
+    let m = x.rows();
+    let mut out = Matrix::zeros(m, m);
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let d = row_dist(x.row(i), x.row(j));
+            out[(i, j)] = d;
+            out[(j, i)] = d;
+        }
+    }
+    out
+}
+
+/// Euclidean distance between two vectors.
+pub fn row_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc.sqrt() as f32
+}
+
+/// Euclidean norm of a vector (Algorithm 1's threshold is
+/// 10% * ||V_p||).
+pub fn norm(a: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for x in a {
+        acc += (*x as f64) * (*x as f64);
+    }
+    acc.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_distances() {
+        let x = Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![3.0, 4.0],
+            vec![0.0, 1.0],
+        ]);
+        let d = pairwise_dists(&x);
+        assert_eq!(d[(0, 1)], 5.0);
+        assert_eq!(d[(0, 2)], 1.0);
+        assert_eq!(d[(1, 1)], 0.0);
+    }
+
+    #[test]
+    fn symmetry_and_zero_diagonal() {
+        forall(
+            "distance matrix symmetric, zero diagonal",
+            |rng: &mut Rng| {
+                let m = rng.range(1, 12);
+                let n = rng.range(1, 8);
+                let (rows, _) = gen::grouped_matrix(rng, m, n, 2);
+                Matrix::from_rows(&rows)
+            },
+            |x| {
+                let d = pairwise_dists(x);
+                for i in 0..x.rows() {
+                    if d[(i, i)] != 0.0 {
+                        return Err(format!("diag ({i},{i}) = {}", d[(i, i)]));
+                    }
+                    for j in 0..x.rows() {
+                        if d[(i, j)] != d[(j, i)] {
+                            return Err(format!("asymmetry at ({i},{j})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn triangle_inequality() {
+        forall(
+            "triangle inequality",
+            |rng: &mut Rng| {
+                let (rows, _) = gen::grouped_matrix(rng, 6, 5, 3);
+                Matrix::from_rows(&rows)
+            },
+            |x| {
+                let d = pairwise_dists(x);
+                for i in 0..6 {
+                    for j in 0..6 {
+                        for k in 0..6 {
+                            if d[(i, j)] > d[(i, k)] + d[(k, j)] + 1e-3 {
+                                return Err(format!("violated at ({i},{j},{k})"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn norm_matches_distance_to_origin() {
+        let v = [1.0f32, 2.0, 2.0];
+        assert_eq!(norm(&v), 3.0);
+        assert_eq!(row_dist(&v, &[0.0, 0.0, 0.0]), 3.0);
+    }
+}

@@ -1,0 +1,388 @@
+//! Severity k-means (paper §4.2.2): classify per-region mean CRNM
+//! values into five categories — very low (0) .. very high (4).
+//!
+//! Fixed-iteration Lloyd's algorithm over 1-D points with linspace
+//! initialization; `KMEANS_ITERS` matches the AOT artifact so the
+//! native path and the PJRT path produce identical assignments (the
+//! integration tests assert it). Severity = rank of the point's
+//! centroid after sorting ascending.
+
+/// Must equal `python/compile/model.py::KMEANS_ITERS` (checked against
+/// the artifact manifest at runtime load).
+pub const KMEANS_ITERS: usize = 32;
+
+/// Number of severity bands.
+pub const K: usize = 5;
+
+/// The paper's five severity categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    VeryLow = 0,
+    Low = 1,
+    Medium = 2,
+    High = 3,
+    VeryHigh = 4,
+}
+
+impl Severity {
+    pub fn from_rank(rank: usize) -> Severity {
+        match rank {
+            0 => Severity::VeryLow,
+            1 => Severity::Low,
+            2 => Severity::Medium,
+            3 => Severity::High,
+            _ => Severity::VeryHigh,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::VeryLow => "very low",
+            Severity::Low => "low",
+            Severity::Medium => "medium",
+            Severity::High => "high",
+            Severity::VeryHigh => "very high",
+        }
+    }
+
+    /// CCR rule (§4.2.2): severity of *high* or *very high* marks a
+    /// critical code region.
+    pub fn is_critical(&self) -> bool {
+        matches!(self, Severity::High | Severity::VeryHigh)
+    }
+}
+
+/// Result of severity clustering over n points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KmeansResult {
+    /// Sorted ascending (band 0 .. band 4).
+    pub centroids: Vec<f32>,
+    /// Severity band per input point.
+    pub severities: Vec<Severity>,
+    pub inertia: f32,
+}
+
+impl KmeansResult {
+    pub fn severity(&self, i: usize) -> Severity {
+        self.severities[i]
+    }
+
+    /// Points in a given band (indices).
+    pub fn band(&self, s: Severity) -> Vec<usize> {
+        self.severities
+            .iter()
+            .enumerate()
+            .filter(|(_, &sev)| sev == s)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Deterministic farthest-point ("greedy k-means++") initialization:
+/// first centroid at the minimum, then repeatedly the point farthest
+/// from all chosen centroids. On the skewed, clumpy distributions
+/// AutoAnalyzer feeds this (a few dominant regions, many near-zero
+/// ones) it recovers the natural bands where linspace init collapses
+/// the bottom mass. Shared with the PJRT path (init is an artifact
+/// input) so both backends start identically.
+pub fn farthest_point_init(points: &[f32]) -> Vec<f32> {
+    if points.is_empty() {
+        return vec![0.0, 0.25, 0.5, 0.75, 1.0];
+    }
+    let mut cents: Vec<f32> = Vec::with_capacity(K);
+    let min = points.iter().copied().fold(f32::INFINITY, f32::min);
+    cents.push(min);
+    while cents.len() < K {
+        let mut best = points[0];
+        let mut best_d = -1.0f32;
+        for &p in points {
+            let d = cents
+                .iter()
+                .map(|&c| (p - c).abs())
+                .fold(f32::INFINITY, f32::min);
+            if d > best_d {
+                best_d = d;
+                best = p;
+            }
+        }
+        cents.push(best);
+    }
+    cents
+}
+
+/// Deterministic linspace initialization over [min, max] (kept for
+/// ablation benches; `severity_kmeans` uses `farthest_point_init`).
+pub fn linspace_init(points: &[f32]) -> Vec<f32> {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &p in points {
+        lo = lo.min(p);
+        hi = hi.max(p);
+    }
+    if points.is_empty() || !lo.is_finite() {
+        lo = 0.0;
+        hi = 1.0;
+    }
+    if lo == hi {
+        hi = lo + 1.0;
+    }
+    (0..K)
+        .map(|i| lo + (hi - lo) * i as f32 / (K - 1) as f32)
+        .collect()
+}
+
+/// Run the fixed-iteration k-means natively (mirrors
+/// `model.kmeans_cluster`, f32 arithmetic to match the artifact).
+pub fn kmeans_fixed(points: &[f32], init: &[f32], iters: usize) -> (Vec<f32>, Vec<u32>, f32) {
+    let k = init.len();
+    let mut cent = init.to_vec();
+    let mut assign = vec![0u32; points.len()];
+    for _ in 0..iters {
+        // Assign.
+        for (i, &p) in points.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (c, &cv) in cent.iter().enumerate() {
+                let d = (p - cv) * (p - cv);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            assign[i] = best as u32;
+        }
+        // Update (empty clusters keep their centroid).
+        let mut sums = vec![0.0f32; k];
+        let mut cnts = vec![0.0f32; k];
+        for (i, &p) in points.iter().enumerate() {
+            sums[assign[i] as usize] += p;
+            cnts[assign[i] as usize] += 1.0;
+        }
+        for c in 0..k {
+            if cnts[c] > 0.0 {
+                cent[c] = sums[c] / cnts[c];
+            }
+        }
+    }
+    let mut inertia = 0.0f32;
+    for &p in points {
+        let mut best = f32::INFINITY;
+        for &cv in &cent {
+            best = best.min((p - cv) * (p - cv));
+        }
+        inertia += best;
+    }
+    (cent, assign, inertia)
+}
+
+/// Convert raw (centroids, assignments) into severity bands.
+///
+/// Only clusters that actually own points count: empty clusters (k-means
+/// with empty-keep update leaves them parked at their init position)
+/// would otherwise inflate or deflate every band. The occupied clusters
+/// are sorted by centroid and spread across the five severity levels —
+/// with u occupied clusters, cluster idx gets band
+/// round(idx * 4 / (u - 1)); a single occupied cluster is Medium (all
+/// regions equally important means none stands out).
+pub fn to_severities(centroids: &[f32], assignments: &[u32]) -> KmeansResult {
+    to_severities_with(centroids, assignments, MERGE_FRACTION)
+}
+
+/// Default gap fraction below which adjacent occupied centroids share a
+/// severity band (see `to_severities`); exposed for the A2 ablation.
+pub const MERGE_FRACTION: f32 = 0.015;
+
+/// `to_severities` with an explicit merge fraction (ablation hook).
+pub fn to_severities_with(
+    centroids: &[f32],
+    assignments: &[u32],
+    merge_fraction: f32,
+) -> KmeansResult {
+    let k = centroids.len();
+    let mut used = vec![false; k];
+    for &a in assignments {
+        used[a as usize] = true;
+    }
+    let mut occupied: Vec<usize> = (0..k).filter(|&c| used[c]).collect();
+    occupied.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+
+    // Group adjacent occupied centroids whose gap is below
+    // `merge_fraction` of the occupied range: farthest-point init will
+    // happily spend leftover centroids splitting a tight natural
+    // cluster, and severity bands should reflect *separated* groups,
+    // not sub-millimetre splits.
+    let range = if occupied.len() >= 2 {
+        centroids[*occupied.last().unwrap()] - centroids[occupied[0]]
+    } else {
+        0.0
+    };
+    let mut group_of_occ = vec![0usize; occupied.len()];
+    let mut group = 0usize;
+    for i in 1..occupied.len() {
+        let gap = centroids[occupied[i]] - centroids[occupied[i - 1]];
+        if gap > merge_fraction * range && range > 0.0 {
+            group += 1;
+        }
+        group_of_occ[i] = group;
+    }
+    let groups = group + 1;
+
+    let mut band_of = vec![0usize; k];
+    for (idx, &c) in occupied.iter().enumerate() {
+        let g = group_of_occ[idx];
+        band_of[c] = if groups <= 1 {
+            2
+        } else {
+            // round(g * 4 / (groups - 1)) in integer arithmetic
+            (g * 4 * 2 + (groups - 1)) / ((groups - 1) * 2)
+        };
+    }
+    let severities = assignments
+        .iter()
+        .map(|&a| Severity::from_rank(band_of[a as usize]))
+        .collect();
+    let mut sorted = centroids.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    KmeansResult {
+        centroids: sorted,
+        severities,
+        inertia: 0.0,
+    }
+}
+
+/// The full native severity clustering used by the analysis pipeline's
+/// native backend.
+pub fn severity_kmeans(points: &[f32]) -> KmeansResult {
+    let init = farthest_point_init(points);
+    let (cent, assign, inertia) = kmeans_fixed(points, &init, KMEANS_ITERS);
+    let mut res = to_severities(&cent, &assign);
+    res.inertia = inertia;
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn well_separated_bands() {
+        // Two dominant regions, two medium, rest tiny.
+        let points = [0.41, 0.38, 0.12, 0.11, 0.01, 0.012, 0.009, 0.02];
+        let r = severity_kmeans(&points);
+        assert!(r.severities[0] >= Severity::High);
+        assert!(r.severities[1] >= Severity::High);
+        assert!(r.severities[4] <= Severity::Low);
+        assert!(r.severities[0] > r.severities[2]);
+    }
+
+    #[test]
+    fn severity_ordering_follows_values() {
+        forall(
+            "larger value never gets lower severity",
+            |rng: &mut Rng| {
+                let len = rng.range(2, 40);
+                gen::f32_vec(rng, len, 0.0, 1.0)
+            },
+            |pts| {
+                let r = severity_kmeans(pts);
+                for i in 0..pts.len() {
+                    for j in 0..pts.len() {
+                        if pts[i] > pts[j] && r.severities[i] < r.severities[j] {
+                            return Err(format!(
+                                "pts[{i}]={} > pts[{j}]={} but sev {:?} < {:?}",
+                                pts[i], pts[j], r.severities[i], r.severities[j]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn centroids_sorted() {
+        forall(
+            "centroids ascending",
+            |rng: &mut Rng| {
+                let len = rng.range(1, 30);
+                gen::f32_vec(rng, len, 0.0, 10.0)
+            },
+            |pts| {
+                let r = severity_kmeans(pts);
+                if r.centroids.windows(2).all(|w| w[0] <= w[1]) {
+                    Ok(())
+                } else {
+                    Err(format!("unsorted {:?}", r.centroids))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn identical_points_single_band() {
+        let points = [0.5f32; 6];
+        let r = severity_kmeans(&points);
+        // All the same value: all in the same band.
+        assert!(r.severities.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn linspace_init_spans_range() {
+        let init = linspace_init(&[2.0, 10.0, 4.0]);
+        assert_eq!(init[0], 2.0);
+        assert_eq!(init[4], 10.0);
+        assert_eq!(init.len(), K);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(linspace_init(&[]), vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        let r = severity_kmeans(&[0.7]);
+        assert_eq!(r.severities.len(), 1);
+    }
+
+    #[test]
+    fn critical_rule() {
+        assert!(Severity::VeryHigh.is_critical());
+        assert!(Severity::High.is_critical());
+        assert!(!Severity::Medium.is_critical());
+    }
+
+    #[test]
+    fn band_lookup() {
+        // Two dominant points, a mid shelf, a low mass: the dominant
+        // pair shares the very-high band.
+        let points = [0.9f32, 0.05, 0.91, 0.3, 0.5, 0.06, 0.52];
+        let r = severity_kmeans(&points);
+        let top = r.band(Severity::VeryHigh);
+        assert!(top.contains(&0) && top.contains(&2), "{:?}", r.severities);
+    }
+
+    #[test]
+    fn farthest_point_init_is_deterministic_and_spans() {
+        let points = [0.1f32, 0.9, 0.5, 0.11, 0.89];
+        let a = farthest_point_init(&points);
+        let b = farthest_point_init(&points);
+        assert_eq!(a, b);
+        assert_eq!(a[0], 0.1, "first centroid at the minimum");
+        assert!(a.contains(&0.9), "farthest point chosen");
+        assert_eq!(a.len(), K);
+    }
+
+    #[test]
+    fn single_occupied_cluster_is_medium() {
+        // All points identical: one occupied cluster => Medium for all.
+        let r = to_severities(&[1.0, 2.0, 3.0, 4.0, 5.0], &[0, 0, 0]);
+        assert!(r.severities.iter().all(|&s| s == Severity::Medium));
+    }
+
+    #[test]
+    fn occupied_bands_spread_to_extremes() {
+        // Two occupied clusters => bands 0 and 4.
+        let r = to_severities(&[1.0, 9.0, 5.0, 6.0, 7.0], &[0, 1, 0]);
+        assert_eq!(r.severities[0], Severity::VeryLow);
+        assert_eq!(r.severities[1], Severity::VeryHigh);
+    }
+}

@@ -1,0 +1,20 @@
+//! Clustering algorithms (paper §4.2) and the pluggable compute backend.
+//!
+//! - `optics`: the simplified OPTICS of Algorithm 1 (dissimilarity
+//!   bottleneck existence).
+//! - `kmeans`: k = 5 severity clustering of per-region CRNM values
+//!   (disparity bottleneck existence), fixed-iteration to match the AOT
+//!   artifact exactly.
+//! - `distance`: native pairwise Euclidean distances.
+//! - `backend`: `ClusterBackend` — the same operations served either by
+//!   the native implementations or by the PJRT runtime executing the
+//!   JAX/Pallas artifacts.
+
+pub mod backend;
+pub mod distance;
+pub mod kmeans;
+pub mod optics;
+
+pub use backend::{ClusterBackend, NativeBackend, PjrtBackend};
+pub use kmeans::{KmeansResult, Severity};
+pub use optics::Clustering;

@@ -1,0 +1,318 @@
+//! Algorithm 1: the simplified OPTICS clustering.
+//!
+//! Performance vectors are points in an n-dimensional space. Starting
+//! from an unassigned point p, every point q with
+//! distance(V_p, V_q) < threshold joins p's cluster, where the paper
+//! fixes threshold = 10% * ||V_p||. If the neighbour count clears
+//! `count_threshold` the group is a cluster; otherwise p is an isolated
+//! point — "which is also a new cluster". One cluster total ⇒ no
+//! dissimilarity bottleneck; more ⇒ load imbalance (paper §4.2.1).
+//!
+//! The distance matrix is the hot input: it comes from either the native
+//! `cluster::distance` or the PJRT pairwise artifact via
+//! `ClusterBackend`, so Algorithm 2's repeated re-clustering exercises
+//! the Pallas kernel.
+
+use crate::cluster::distance::norm;
+use crate::util::matrix::Matrix;
+
+/// Paper's threshold factor: 10% of the anchor vector's length.
+pub const THRESHOLD_FACTOR: f32 = 0.10;
+
+/// A clustering of m points; clusters are canonically ordered by their
+/// smallest member, members sorted ascending — so `PartialEq` is
+/// exactly Algorithm 2's "clustering result changes" test ("the number
+/// of clusters or members of a cluster change").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Clustering {
+    clusters: Vec<Vec<usize>>,
+    assignment: Vec<usize>,
+}
+
+impl Clustering {
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn clusters(&self) -> &[Vec<usize>] {
+        &self.clusters
+    }
+
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    pub fn cluster_of(&self, point: usize) -> usize {
+        self.assignment[point]
+    }
+
+    /// All points behave alike ⇒ no dissimilarity bottleneck.
+    pub fn is_uniform(&self) -> bool {
+        self.clusters.len() <= 1
+    }
+
+    /// Our dissimilarity severity in [0, 1]: 1 - |largest cluster| / m.
+    /// (The paper prints a severity — Fig. 9 shows 0.78 for 8 processes
+    /// in 5 clusters — without defining it; this definition reproduces
+    /// the qualitative magnitude: 5 clusters of 8 procs ⇒ 0.75.)
+    pub fn severity(&self) -> f64 {
+        let m: usize = self.clusters.iter().map(Vec::len).sum();
+        if m == 0 {
+            return 0.0;
+        }
+        let largest = self.clusters.iter().map(Vec::len).max().unwrap_or(0);
+        1.0 - largest as f64 / m as f64
+    }
+
+    fn canonicalize(mut clusters: Vec<Vec<usize>>, m: usize) -> Clustering {
+        for c in &mut clusters {
+            c.sort_unstable();
+        }
+        clusters.sort_by_key(|c| c[0]);
+        let mut assignment = vec![0usize; m];
+        for (ci, c) in clusters.iter().enumerate() {
+            for &p in c {
+                assignment[p] = ci;
+            }
+        }
+        Clustering {
+            clusters,
+            assignment,
+        }
+    }
+
+    /// Render in the paper's Fig. 9 style.
+    pub fn render(&self) -> String {
+        let mut out = format!("there are {} clusters of processes\n", self.num_clusters());
+        for (i, c) in self.clusters.iter().enumerate() {
+            let members: Vec<String> = c.iter().map(|p| p.to_string()).collect();
+            out.push_str(&format!("cluster {}: {}\n", i, members.join(" ")));
+        }
+        out
+    }
+}
+
+/// Run Algorithm 1 given performance vectors (rows of `x`).
+///
+/// `count_threshold`: minimum neighbour count for a non-isolated
+/// cluster; the paper leaves it a parameter — 1 (at least one
+/// neighbour) reproduces all the paper's results and is the default
+/// used by `simplified_optics`.
+pub fn simplified_optics(x: &Matrix) -> Clustering {
+    let d = crate::cluster::distance::pairwise_dists(x);
+    simplified_optics_with(x, &d, 1)
+}
+
+/// Core of Algorithm 1 given precomputed row norms and distances —
+/// used by the incremental re-clustering in Algorithm 2, where the
+/// distance matrix is patched per zero-out probe instead of being
+/// recomputed (EXPERIMENTS.md §Perf change 2).
+pub fn simplified_optics_from_parts(
+    norms: &[f32],
+    d: &Matrix,
+    count_threshold: usize,
+) -> Clustering {
+    let m = norms.len();
+    if m == 0 {
+        return Clustering {
+            clusters: Vec::new(),
+            assignment: Vec::new(),
+        };
+    }
+    let mut assigned = vec![false; m];
+    let mut clusters: Vec<Vec<usize>> = Vec::new();
+    for p in 0..m {
+        if assigned[p] {
+            continue;
+        }
+        let threshold = THRESHOLD_FACTOR * norms[p];
+        let mut count = 0usize;
+        for q in 0..m {
+            if q != p && d[(p, q)] <= threshold {
+                count += 1;
+            }
+        }
+        if count >= count_threshold && count > 0 {
+            let mut members = vec![p];
+            assigned[p] = true;
+            for q in 0..m {
+                if !assigned[q] && q != p && d[(p, q)] <= threshold {
+                    members.push(q);
+                    assigned[q] = true;
+                }
+            }
+            clusters.push(members);
+        } else {
+            assigned[p] = true;
+            clusters.push(vec![p]);
+        }
+    }
+    Clustering::canonicalize(clusters, m)
+}
+
+/// Core of Algorithm 1, reusing a precomputed distance matrix (the PJRT
+/// path computes `d` on the artifact and calls this).
+pub fn simplified_optics_with(
+    x: &Matrix,
+    d: &Matrix,
+    count_threshold: usize,
+) -> Clustering {
+    // `<=` rather than `<` inside: identical vectors (distance 0) must
+    // cluster together even when the anchor is the zero vector
+    // (threshold 0) — constant metrics over all processes mean one
+    // behaviour class, not m isolated points.
+    let norms: Vec<f32> = (0..x.rows()).map(|p| norm(x.row(p))).collect();
+    simplified_optics_from_parts(&norms, d, count_threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Rng;
+
+    fn mat(rows: &[Vec<f32>]) -> Matrix {
+        Matrix::from_rows(rows)
+    }
+
+    #[test]
+    fn identical_processes_form_one_cluster() {
+        let rows: Vec<Vec<f32>> = (0..6).map(|_| vec![100.0, 50.0]).collect();
+        let x = mat(&rows);
+        let c = simplified_optics(&x);
+        assert!(c.is_uniform());
+        assert_eq!(c.clusters()[0], vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(c.severity(), 0.0);
+    }
+
+    #[test]
+    fn near_identical_within_ten_percent() {
+        // 5% relative spread — inside the 10% * norm threshold.
+        let x = mat(&[
+            vec![100.0, 100.0],
+            vec![103.0, 100.0],
+            vec![100.0, 97.0],
+        ]);
+        assert!(simplified_optics(&x).is_uniform());
+    }
+
+    #[test]
+    fn outlier_becomes_isolated_cluster() {
+        let x = mat(&[
+            vec![100.0, 100.0],
+            vec![101.0, 100.0],
+            vec![500.0, 400.0],
+        ]);
+        let c = simplified_optics(&x);
+        assert_eq!(c.num_clusters(), 2);
+        assert_eq!(c.clusters()[1], vec![2]);
+    }
+
+    #[test]
+    fn fig9_like_five_clusters() {
+        // Emulate ST's Fig. 9 memberships: {0},{1,2},{3},{4,6},{5,7}.
+        let x = mat(&[
+            vec![10.0, 10.0],    // 0 alone
+            vec![100.0, 100.0],  // 1
+            vec![101.0, 100.0],  // 2 with 1
+            vec![200.0, 180.0],  // 3 alone
+            vec![300.0, 260.0],  // 4
+            vec![400.0, 340.0],  // 5
+            vec![301.0, 261.0],  // 6 with 4
+            vec![401.0, 341.0],  // 7 with 5
+        ]);
+        let c = simplified_optics(&x);
+        assert_eq!(c.num_clusters(), 5);
+        assert_eq!(
+            c.clusters(),
+            &[vec![0], vec![1, 2], vec![3], vec![4, 6], vec![5, 7]]
+        );
+        assert!((c.severity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equality_detects_membership_changes() {
+        let a = mat(&[vec![1.0, 1.0], vec![1.01, 1.0], vec![5.0, 5.0]]);
+        let b = mat(&[vec![1.0, 1.0], vec![4.9, 5.0], vec![5.0, 5.0]]);
+        assert_ne!(simplified_optics(&a), simplified_optics(&b));
+    }
+
+    #[test]
+    fn every_point_in_exactly_one_cluster() {
+        forall(
+            "partition property",
+            |rng: &mut Rng| {
+                let m = rng.range(1, 24);
+                let n = rng.range(1, 6);
+                let groups = rng.range(1, 4);
+                let (rows, _) = gen::grouped_matrix(rng, m, n, groups);
+                Matrix::from_rows(&rows)
+            },
+            |x| {
+                let c = simplified_optics(x);
+                let mut seen = vec![0usize; x.rows()];
+                for cl in c.clusters() {
+                    for &p in cl {
+                        seen[p] += 1;
+                    }
+                }
+                if seen.iter().all(|&s| s == 1) {
+                    Ok(())
+                } else {
+                    Err(format!("point multiplicity {seen:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tight_groups_recovered() {
+        forall(
+            "well-separated groups => clusters refine labels",
+            |rng: &mut Rng| {
+                let groups = rng.range(2, 4);
+                let m = rng.range(4, 16);
+                let (rows, labels) = gen::grouped_matrix(rng, m, 4, groups);
+                (Matrix::from_rows(&rows), labels)
+            },
+            |(x, labels)| {
+                let c = simplified_optics(x);
+                // Points in the same cluster must share a label (clusters
+                // never merge distinct far-apart groups; they may split).
+                for cl in c.clusters() {
+                    let l0 = labels[cl[0]];
+                    if !cl.iter().all(|&p| labels[p] == l0) {
+                        return Err(format!("cluster {cl:?} mixes labels"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn render_matches_fig9_format() {
+        let x = mat(&[vec![1.0, 1.0], vec![1.001, 1.0], vec![9.0, 9.0]]);
+        let r = simplified_optics(&x).render();
+        assert!(r.contains("there are 2 clusters"));
+        assert!(r.contains("cluster 0: 0 1"));
+        assert!(r.contains("cluster 1: 2"));
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = simplified_optics(&Matrix::zeros(0, 0));
+        assert_eq!(c.num_clusters(), 0);
+        assert_eq!(c.severity(), 0.0);
+    }
+
+    #[test]
+    fn zero_vectors_cluster_together() {
+        // All-zero vectors are identical behaviour: one cluster (the
+        // root-cause tables rely on constant attributes collapsing).
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0, 0.0]).collect();
+        let x = mat(&rows);
+        let c = simplified_optics(&x);
+        assert_eq!(c.num_clusters(), 1);
+    }
+}

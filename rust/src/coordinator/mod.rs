@@ -1,0 +1,18 @@
+//! The analysis coordinator: a threaded job service that runs the
+//! AutoAnalyzer pipeline over streams of traces.
+//!
+//! The paper's tool analyzes one application per run; deployed as a
+//! cluster service (the "data management + analysis" node of Fig. 6),
+//! AutoAnalyzer becomes a consumer of trace streams — every job is a
+//! (trace, config) pair and the hot cost is the clustering work that
+//! Algorithm 2 re-issues per code region. The coordinator owns:
+//!
+//! - a bounded job queue with backpressure (`submit` blocks when full);
+//! - a worker pool, each worker constructing its *own* backend (the
+//!   PJRT client wraps raw C handles, so backends are created on the
+//!   worker thread rather than shared);
+//! - per-job latency + throughput accounting (`CoordinatorStats`).
+
+pub mod service;
+
+pub use service::{AnalysisJob, Coordinator, CoordinatorStats, JobOutcome};

@@ -1,0 +1,279 @@
+//! Worker-pool job service.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::analysis::pipeline::{analyze, AnalysisConfig};
+use crate::cluster::ClusterBackend;
+use crate::trace::Trace;
+
+/// One unit of work: analyze a trace.
+pub struct AnalysisJob {
+    pub id: u64,
+    pub trace: Trace,
+    pub config: AnalysisConfig,
+}
+
+/// What came back.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub summary: String,
+    /// Dissimilarity CCCR count + disparity CCR count (quick triage).
+    pub dissimilarity_cccrs: usize,
+    pub disparity_ccrs: usize,
+    pub latency: Duration,
+    pub error: Option<String>,
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Default)]
+pub struct CoordinatorStats {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub busy_nanos: AtomicU64,
+}
+
+impl CoordinatorStats {
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        self.completed.load(Ordering::Relaxed) as f64 / wall.as_secs_f64().max(1e-9)
+    }
+}
+
+struct Queue {
+    jobs: Mutex<VecDeque<AnalysisJob>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+    closed: AtomicBool,
+}
+
+/// The coordinator service. Results are delivered through an
+/// `std::sync::mpsc` channel returned by `start`.
+pub struct Coordinator {
+    queue: Arc<Queue>,
+    pub stats: Arc<CoordinatorStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start `workers` threads. `backend_factory` runs once per worker,
+    /// on the worker thread (PJRT clients are per-thread; see module
+    /// docs). Queue holds at most `queue_cap` pending jobs — `submit`
+    /// blocks beyond that (backpressure).
+    pub fn start<F>(
+        workers: usize,
+        queue_cap: usize,
+        backend_factory: F,
+    ) -> (Coordinator, std::sync::mpsc::Receiver<JobOutcome>)
+    where
+        F: Fn() -> Result<Box<dyn ClusterBackend>> + Send + Clone + 'static,
+    {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cap: queue_cap.max(1),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let stats = Arc::new(CoordinatorStats::default());
+        let (tx, rx) = std::sync::mpsc::channel::<JobOutcome>();
+
+        let mut handles = Vec::new();
+        for wid in 0..workers.max(1) {
+            let queue = queue.clone();
+            let stats = stats.clone();
+            let tx = tx.clone();
+            let factory = backend_factory.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("autoanalyzer-worker-{wid}"))
+                    .spawn(move || {
+                        let backend = match factory() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!("worker {wid}: backend init failed: {e}");
+                                return;
+                            }
+                        };
+                        loop {
+                            let job = {
+                                let mut jobs = queue.jobs.lock().unwrap();
+                                loop {
+                                    if let Some(job) = jobs.pop_front() {
+                                        queue.not_full.notify_one();
+                                        break Some(job);
+                                    }
+                                    if queue.closed.load(Ordering::Acquire) {
+                                        break None;
+                                    }
+                                    jobs = queue.not_empty.wait(jobs).unwrap();
+                                }
+                            };
+                            let Some(job) = job else { return };
+                            let start = Instant::now();
+                            let outcome = match analyze(&job.trace, backend.as_ref(), &job.config)
+                            {
+                                Ok(report) => JobOutcome {
+                                    id: job.id,
+                                    summary: report.summary(),
+                                    dissimilarity_cccrs: report.dissimilarity.cccrs.len(),
+                                    disparity_ccrs: report.disparity.ccrs.len(),
+                                    latency: start.elapsed(),
+                                    error: None,
+                                },
+                                Err(e) => {
+                                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                                    JobOutcome {
+                                        id: job.id,
+                                        summary: String::new(),
+                                        dissimilarity_cccrs: 0,
+                                        disparity_ccrs: 0,
+                                        latency: start.elapsed(),
+                                        error: Some(e.to_string()),
+                                    }
+                                }
+                            };
+                            stats
+                                .busy_nanos
+                                .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            stats.completed.fetch_add(1, Ordering::Relaxed);
+                            // Receiver may have been dropped (fire-and-forget callers).
+                            let _ = tx.send(outcome);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        (
+            Coordinator {
+                queue,
+                stats,
+                workers: handles,
+            },
+            rx,
+        )
+    }
+
+    /// Enqueue a job; blocks while the queue is full.
+    pub fn submit(&self, job: AnalysisJob) {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        while jobs.len() >= self.queue.cap {
+            jobs = self.queue.not_full.wait(jobs).unwrap();
+        }
+        jobs.push_back(job);
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queue.not_empty.notify_one();
+    }
+
+    /// Current queue depth (for backpressure monitoring).
+    pub fn queued(&self) -> usize {
+        self.queue.jobs.lock().unwrap().len()
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(self) {
+        self.queue.closed.store(true, Ordering::Release);
+        self.queue.not_empty.notify_all();
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::synthetic::{synthetic, Inject};
+
+    fn native_factory() -> Result<Box<dyn ClusterBackend>> {
+        Ok(Box::new(NativeBackend))
+    }
+
+    #[test]
+    fn processes_a_stream_of_jobs() {
+        let (coord, rx) = Coordinator::start(4, 8, native_factory);
+        let n = 24;
+        for i in 0..n {
+            let inj = if i % 3 == 0 {
+                vec![(2usize, Inject::Imbalance)]
+            } else {
+                vec![]
+            };
+            let spec = synthetic(4, 6, &inj, i);
+            let trace = simulate(&spec, i);
+            coord.submit(AnalysisJob {
+                id: i,
+                trace,
+                config: AnalysisConfig::default(),
+            });
+        }
+        let mut got = Vec::new();
+        for _ in 0..n {
+            got.push(rx.recv().expect("outcome"));
+        }
+        coord.shutdown();
+        assert_eq!(got.len(), n as usize);
+        assert!(got.iter().all(|o| o.error.is_none()), "{got:?}");
+        // Imbalanced jobs found their bottleneck.
+        for o in &got {
+            if o.id % 3 == 0 {
+                assert!(o.dissimilarity_cccrs > 0, "job {} missed imbalance", o.id);
+            } else {
+                assert_eq!(o.dissimilarity_cccrs, 0, "job {} false positive", o.id);
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_queue() {
+        let (coord, rx) = Coordinator::start(1, 2, native_factory);
+        for i in 0..6 {
+            let spec = synthetic(4, 4, &[], i);
+            coord.submit(AnalysisJob {
+                id: i,
+                trace: simulate(&spec, i),
+                config: AnalysisConfig::default(),
+            });
+            assert!(coord.queued() <= 2);
+        }
+        for _ in 0..6 {
+            rx.recv().unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_empty_queue_joins() {
+        let (coord, _rx) = Coordinator::start(3, 4, native_factory);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (coord, rx) = Coordinator::start(2, 4, native_factory);
+        for i in 0..4 {
+            let spec = synthetic(4, 4, &[], i);
+            coord.submit(AnalysisJob {
+                id: i,
+                trace: simulate(&spec, i),
+                config: AnalysisConfig::default(),
+            });
+        }
+        for _ in 0..4 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(coord.stats.submitted.load(Ordering::Relaxed), 4);
+        assert_eq!(coord.stats.completed.load(Ordering::Relaxed), 4);
+        assert_eq!(coord.stats.failed.load(Ordering::Relaxed), 0);
+        coord.shutdown();
+    }
+}

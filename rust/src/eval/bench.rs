@@ -1,0 +1,138 @@
+//! Minimal benchmark harness (criterion replacement).
+//!
+//! Usage from a `[[bench]]` target with `harness = false`:
+//!
+//! ```ignore
+//! let mut b = Bench::new("perf_distance");
+//! b.run("pairwise 8x14 native", || { ... });
+//! println!("{}", b.report());
+//! ```
+//!
+//! Each case is warmed up, then measured for a target wall budget with
+//! batched iterations; mean/std/p50/p99 are reported. `BENCH_FAST=1`
+//! shrinks budgets for smoke runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Welford};
+use crate::util::tables::{human_secs, Table};
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+pub struct Bench {
+    pub name: String,
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<CaseResult>,
+}
+
+fn fast_mode() -> bool {
+    std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let (warmup, budget) = if fast_mode() {
+            (Duration::from_millis(20), Duration::from_millis(80))
+        } else {
+            (Duration::from_millis(200), Duration::from_millis(900))
+        };
+        Bench {
+            name: name.to_string(),
+            warmup,
+            budget,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; returns the mean seconds per call.
+    pub fn run<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> f64 {
+        // Warmup + estimate per-call cost.
+        let w_start = Instant::now();
+        let mut calls = 0u64;
+        while w_start.elapsed() < self.warmup || calls == 0 {
+            std::hint::black_box(f());
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = w_start.elapsed().as_secs_f64() / calls as f64;
+        // Batch so each sample is ≥ ~50µs (timer noise floor).
+        let batch = ((50e-6 / per_call.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let mut acc = Welford::default();
+        let m_start = Instant::now();
+        let mut total_iters = 0u64;
+        while m_start.elapsed() < self.budget || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let per = t.elapsed().as_secs_f64() / batch as f64;
+            samples.push(per);
+            acc.push(per);
+            total_iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let res = CaseResult {
+            name: case.to_string(),
+            iters: total_iters,
+            mean: acc.mean(),
+            std: acc.stddev(),
+            p50: percentile(&samples, 50.0),
+            p99: percentile(&samples, 99.0),
+        };
+        let mean = res.mean;
+        self.results.push(res);
+        mean
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            &format!("bench: {}", self.name),
+            &["case", "mean", "std", "p50", "p99", "iters"],
+        );
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                human_secs(r.mean),
+                human_secs(r.std),
+                human_secs(r.p50),
+                human_secs(r.p99),
+                r.iters.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("demo");
+        let mean = b.run("noop-ish", || std::hint::black_box(3u64.wrapping_mul(7)));
+        assert!(mean >= 0.0);
+        let rep = b.report();
+        assert!(rep.contains("bench: demo"));
+        assert!(rep.contains("noop-ish"));
+    }
+}

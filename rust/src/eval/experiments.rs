@@ -1,0 +1,525 @@
+//! Regenerators for every table and figure of the paper's evaluation
+//! (§6). Each experiment simulates the relevant workload, runs the
+//! pipeline on the given backend, prints the paper's rows/series, and
+//! asserts the qualitative *shape* the paper reports (memberships, CCR
+//! sets, rough-set cores, orderings) — returning an error when the
+//! shape no longer holds, so `cargo bench`/`reproduce` doubles as a
+//! regression harness for the reproduction itself.
+
+use anyhow::{ensure, Result};
+
+use crate::analysis::pipeline::{analyze, AnalysisConfig};
+use crate::cluster::ClusterBackend;
+use crate::metrics::{region_series, Metric, MetricView};
+use crate::regions::RegionId;
+use crate::search::{disparity_search, dissimilarity_search};
+use crate::simulator::engine::simulate;
+use crate::trace::Trace;
+use crate::util::tables::{f2, f4, Table};
+use crate::workloads::npar1way::{npar1way, NparParams};
+use crate::workloads::optimize;
+use crate::workloads::st::{st_coarse, StParams};
+use crate::workloads::st_fine::st_fine;
+use crate::workloads::{mpibzip2, st};
+
+/// Deterministic seed shared by all experiments.
+pub const SEED: u64 = 2011;
+
+/// One experiment: id, paper artifact, regenerator.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper: &'static str,
+    pub run: fn(&dyn ClusterBackend) -> Result<String>,
+}
+
+/// The full experiment registry (DESIGN.md §4).
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment { id: "fig09", paper: "Fig. 9 — ST similarity clusters + CCR tree", run: fig09 },
+    Experiment { id: "table3", paper: "Table 3 + Fig. 10 — dissimilarity decision table, matrix, core", run: table3 },
+    Experiment { id: "fig11", paper: "Fig. 11 — instructions retired of region 11 per process", run: fig11 },
+    Experiment { id: "fig12", paper: "Fig. 12 — k-means severity bands of ST", run: fig12 },
+    Experiment { id: "fig13", paper: "Fig. 13/21 — average CRNM per ST region", run: fig13 },
+    Experiment { id: "table4", paper: "Table 4 — disparity decision table + root causes", run: table4 },
+    Experiment { id: "fig14", paper: "Fig. 14 — ST performance before/after optimization", run: fig14 },
+    Experiment { id: "fig15_16", paper: "Fig. 15+16 — fine-grain ST refinement", run: fig15_16 },
+    Experiment { id: "fig17", paper: "Fig. 17 + §6.2 — NPAR1WAY analysis + optimization", run: fig17 },
+    Experiment { id: "fig19", paper: "Fig. 18+19 + §6.3 — MPIBZIP2 analysis", run: fig19 },
+    Experiment { id: "fig20_23", paper: "Fig. 20–23 + §6.4 — metric comparison study", run: fig20_23 },
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, backend: &dyn ClusterBackend) -> Result<String> {
+    for e in EXPERIMENTS {
+        if e.id == id {
+            return (e.run)(backend);
+        }
+    }
+    anyhow::bail!(
+        "unknown experiment '{id}' (have: {})",
+        EXPERIMENTS.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+    )
+}
+
+fn st_trace() -> Trace {
+    simulate(&st_coarse(&StParams::default()), SEED)
+}
+
+fn ids(v: &[RegionId]) -> Vec<usize> {
+    v.iter().map(|r| r.0).collect()
+}
+
+// --- E1: Fig. 9 ---------------------------------------------------------
+fn fig09(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let r = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::CpuClock))?;
+    let mut out = String::from("# Fig. 9 — ST similarity analysis\n");
+    out.push_str(&r.render());
+    out.push_str(&format!(
+        "CCR tree: code region 14 (1-CCR) ---> code region 11 (2-CCR & CCCR)\n\
+         [paper: 5 clusters {{0}},{{1,2}},{{3}},{{4,6}},{{5,7}}; severity 0.78; CCCR 11]\n"
+    ));
+    ensure!(r.clustering.num_clusters() == 5, "expected 5 clusters");
+    ensure!(
+        r.clustering.clusters()
+            == &[vec![0], vec![1, 2], vec![3], vec![4, 6], vec![5, 7]],
+        "memberships {:?}",
+        r.clustering.clusters()
+    );
+    ensure!(ids(&r.ccrs) == vec![11, 14], "CCRs {:?}", r.ccrs);
+    ensure!(ids(&r.cccrs) == vec![11], "CCCRs {:?}", r.cccrs);
+    Ok(out)
+}
+
+// --- E2: Table 3 + Fig. 10 ----------------------------------------------
+fn table3(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let rc = report
+        .dissimilarity_causes
+        .as_ref()
+        .expect("ST has dissimilarity bottlenecks");
+    let mut out = String::from("# Table 3 + Fig. 10 — dissimilarity root cause\n");
+    out.push_str(&rc.table.render("decision table (dissimilarity)"));
+    out.push_str(&rc.matrix_render);
+    out.push_str(&format!(
+        "root causes: {:?}  [paper: a5 = instructions retired]\n",
+        rc.cause_names()
+    ));
+    ensure!(
+        rc.cause_names() == vec!["instructions retired"],
+        "core should be {{a5}}, got {:?}",
+        rc.cause_names()
+    );
+    Ok(out)
+}
+
+// --- E3: Fig. 11 ---------------------------------------------------------
+fn fig11(_backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let series = region_series(&trace, RegionId(11), MetricView::Plain(Metric::Instructions));
+    let mut t = Table::new(
+        "Fig. 11 — instructions retired of code region 11",
+        &["process", "instructions"],
+    );
+    for (p, v) in series.iter().enumerate() {
+        t.row(&[p.to_string(), format!("{:.3e}", v)]);
+    }
+    let min = series.iter().cloned().fold(f64::MAX, f64::min);
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    let mut out = String::from("# Fig. 11\n");
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "max/min = {:.2}  [paper: obvious variance across processes]\n",
+        max / min
+    ));
+    ensure!(max / min > 2.0, "variance should be obvious: {}", max / min);
+    Ok(out)
+}
+
+// --- E4: Fig. 12 ---------------------------------------------------------
+fn fig12(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let r = disparity_search(&trace, backend, MetricView::Crnm)?;
+    let mut out = String::from("# Fig. 12 — ST severity bands\n");
+    out.push_str(&r.render());
+    out.push_str(
+        "[paper: very high {14,11}; high {8}; medium {5,6}; low {2}; very low rest]\n",
+    );
+    use crate::cluster::kmeans::Severity;
+    let band = |s: Severity| -> Vec<usize> {
+        r.kmeans.band(s).iter().map(|i| i + 1).collect()
+    };
+    ensure!(band(Severity::VeryHigh) == vec![11, 14], "VH {:?}", band(Severity::VeryHigh));
+    ensure!(band(Severity::High) == vec![8], "H {:?}", band(Severity::High));
+    ensure!(band(Severity::Medium) == vec![5, 6], "M {:?}", band(Severity::Medium));
+    ensure!(ids(&r.cccrs) == vec![8, 11], "CCCRs {:?}", r.cccrs);
+    Ok(out)
+}
+
+// --- E5: Fig. 13 / Fig. 21 ----------------------------------------------
+fn fig13(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let r = disparity_search(&trace, backend, MetricView::Crnm)?;
+    let mut t = Table::new(
+        "Fig. 13/21 — average CRNM of each ST code region",
+        &["region", "crnm"],
+    );
+    for (i, m) in r.means.iter().enumerate() {
+        t.row(&[(i + 1).to_string(), f4(*m)]);
+    }
+    let mut out = String::from("# Fig. 13/21\n");
+    out.push_str(&t.render());
+    // Shape: regions 11/14 dominate, then 8, and 11's CRNM magnitude is
+    // in the paper's 0.4-ish neighbourhood scaled by our run wall.
+    ensure!(r.means[10] > r.means[7] && r.means[7] > r.means[4]);
+    Ok(out)
+}
+
+// --- E6: Table 4 ---------------------------------------------------------
+fn table4(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = st_trace();
+    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let rc = report.disparity_causes.as_ref().expect("ST has disparity CCRs");
+    let mut out = String::from("# Table 4 — disparity root cause\n");
+    out.push_str(&rc.table.render("decision table (disparity)"));
+    out.push_str(&format!(
+        "root causes: {:?}  [paper: {{a2, a3}} = L2 miss rate + disk I/O]\n",
+        rc.cause_names()
+    ));
+    for (region, causes) in &rc.per_bottleneck {
+        out.push_str(&format!("  code region {region}: {causes:?}\n"));
+    }
+    ensure!(
+        rc.cause_names() == vec!["L2 cache miss rate", "disk I/O quantity"],
+        "causes {:?}",
+        rc.cause_names()
+    );
+    let get = |r: usize| {
+        rc.per_bottleneck
+            .iter()
+            .find(|(rr, _)| rr.0 == r)
+            .map(|(_, c)| c.clone())
+            .unwrap_or_default()
+    };
+    ensure!(get(8) == vec!["disk I/O quantity"], "r8 {:?}", get(8));
+    ensure!(get(11) == vec!["L2 cache miss rate"], "r11 {:?}", get(11));
+    // Paper's magnitudes: region 8 ≈ 106 GB of disk I/O; region 11 ≈
+    // 17.8 % L2 miss rate.
+    let disk_total: f64 = (0..trace.nprocs())
+        .map(|p| trace.sample(p, RegionId(8)).disk_bytes)
+        .sum();
+    let l2 = trace.sample(0, RegionId(11)).l2_miss_rate();
+    out.push_str(&format!(
+        "region 8 disk total = {:.1} GB [paper 106 GB]; region 11 L2 miss rate = {:.1}% [paper 17.8%]\n",
+        disk_total / 1e9,
+        100.0 * l2
+    ));
+    ensure!(disk_total > 50e9 && disk_total < 200e9);
+    ensure!(l2 > 0.12 && l2 < 0.25);
+    Ok(out)
+}
+
+// --- E7: Fig. 14 ---------------------------------------------------------
+fn fig14(_backend: &dyn ClusterBackend) -> Result<String> {
+    let base = StParams::default();
+    let t0 = simulate(&st_coarse(&base), SEED).run_wall();
+    let t_dis = simulate(&st_coarse(&optimize::st_fix_dissimilarity(&base)), SEED).run_wall();
+    let t_dsp = simulate(&st_coarse(&optimize::st_fix_disparity(&base)), SEED).run_wall();
+    let t_both = simulate(&st_coarse(&optimize::st_fix_both(&base)), SEED).run_wall();
+    let mut t = Table::new(
+        "Fig. 14 — ST performance before/after optimization",
+        &["variant", "wall (s)", "speedup", "paper"],
+    );
+    let row = |name: &str, wall: f64, paper: &str| {
+        [
+            name.to_string(),
+            f2(wall),
+            format!("+{:.0}%", (t0 / wall - 1.0) * 100.0),
+            paper.to_string(),
+        ]
+    };
+    t.row(&row("original", t0, "-"));
+    t.row(&row("dissimilarity fixed", t_dis, "+40%"));
+    t.row(&row("disparity fixed", t_dsp, "+90%"));
+    t.row(&row("both fixed", t_both, "+170%"));
+    let mut out = String::from("# Fig. 14\n");
+    out.push_str(&t.render());
+    out.push_str(
+        "[shape: both > disparity-only > dissimilarity-only > original; our simulator\n\
+         compresses absolute gains because optimized regions keep their cost floors]\n",
+    );
+    ensure!(t_dis < t0 && t_dsp < t_dis && t_both < t_dsp,
+        "ordering: {t0} > {t_dis} > {t_dsp} > {t_both}");
+    ensure!(t0 / t_both > 1.5, "combined speedup at least +50%: {}", t0 / t_both);
+    Ok(out)
+}
+
+// --- E8: Fig. 15 + 16 ----------------------------------------------------
+fn fig15_16(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = simulate(&st_fine(&StParams::default()), SEED);
+    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let mut out = String::from("# Fig. 15/16 — fine-grain ST (shots = 300)\n");
+    out.push_str(&trace.tree.render());
+    out.push_str(&report.dissimilarity.render());
+    out.push_str(&report.disparity.render());
+    let series = region_series(&trace, RegionId(21), MetricView::Plain(Metric::Instructions));
+    let mut t = Table::new(
+        "Fig. 16 — instructions retired of code region 21",
+        &["process", "instructions"],
+    );
+    for (p, v) in series.iter().enumerate() {
+        t.row(&[p.to_string(), format!("{:.3e}", v)]);
+    }
+    out.push_str(&t.render());
+    out.push_str("[paper: CCR chain 14→11→21, CCCR 21; disparity adds 19 and 21]\n");
+    ensure!(ids(&report.dissimilarity.cccrs) == vec![21], "CCCR {:?}", report.dissimilarity.cccrs);
+    ensure!(
+        ids(&report.dissimilarity.ccrs) == vec![11, 14, 21],
+        "CCRs {:?}",
+        report.dissimilarity.ccrs
+    );
+    let dccrs = ids(&report.disparity.ccrs);
+    ensure!(dccrs.contains(&19) && dccrs.contains(&21), "disparity {:?}", dccrs);
+    ensure!(
+        ids(&report.disparity.cccrs).contains(&19)
+            && ids(&report.disparity.cccrs).contains(&21),
+        "disparity CCCRs {:?}",
+        report.disparity.cccrs
+    );
+    Ok(out)
+}
+
+// --- E9: Fig. 17 + §6.2 --------------------------------------------------
+fn fig17(backend: &dyn ClusterBackend) -> Result<String> {
+    let base = NparParams::default();
+    let trace = simulate(&npar1way(&base), SEED);
+    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let mut out = String::from("# Fig. 17 + §6.2 — NPAR1WAY\n");
+    out.push_str(&report.dissimilarity.render());
+    let mut t = Table::new(
+        "Fig. 17 — average CRNM per region (8 processes)",
+        &["region", "crnm", "severity"],
+    );
+    for (i, m) in report.disparity.means.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            f4(*m),
+            report.disparity.kmeans.severities[i].name().to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&report.disparity.render());
+    let rc = report.disparity_causes.as_ref().unwrap();
+    out.push_str(&format!(
+        "root causes: {:?}  [paper: {{a4, a5}}]\n",
+        rc.cause_names()
+    ));
+    ensure!(report.dissimilarity.clustering.is_uniform(), "no dissimilarity");
+    ensure!(ids(&report.disparity.cccrs) == vec![3, 12], "CCCRs {:?}", report.disparity.cccrs);
+    ensure!(
+        rc.cause_names() == vec!["network I/O quantity", "instructions retired"],
+        "causes {:?}",
+        rc.cause_names()
+    );
+
+    // §6.2.2 optimization round.
+    let fixed = optimize::npar_fix(&base);
+    let t1 = simulate(&npar1way(&fixed), SEED);
+    let instr = |t: &Trace, r: usize| t.region_mean(RegionId(r), |s| s.instructions);
+    let wall = |t: &Trace, r: usize| t.region_mean(RegionId(r), |s| s.wall);
+    let mut opt = Table::new(
+        "§6.2.2 — CSE optimization deltas",
+        &["region", "instr delta", "wall delta", "paper instr", "paper wall"],
+    );
+    for (r, pi, pw) in [(3usize, "-36.32%", "-20.33%"), (12, "-16.93%", "-8.46%")] {
+        opt.row(&[
+            r.to_string(),
+            format!("{:+.2}%", (instr(&t1, r) / instr(&trace, r) - 1.0) * 100.0),
+            format!("{:+.2}%", (wall(&t1, r) / wall(&trace, r) - 1.0) * 100.0),
+            pi.to_string(),
+            pw.to_string(),
+        ]);
+    }
+    out.push_str(&opt.render());
+    let speedup = trace.run_wall() / t1.run_wall() - 1.0;
+    out.push_str(&format!("overall speedup: +{:.1}% [paper: +20%]\n", speedup * 100.0));
+    ensure!(speedup > 0.05);
+    Ok(out)
+}
+
+// --- E10: Fig. 18 + 19 + §6.3 -------------------------------------------
+fn fig19(backend: &dyn ClusterBackend) -> Result<String> {
+    let trace = simulate(&mpibzip2::mpibzip2(), SEED);
+    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let mut out = String::from("# Fig. 18/19 + §6.3 — MPIBZIP2\n");
+    out.push_str(&trace.tree.render());
+    out.push_str(&report.dissimilarity.render());
+    let mut t = Table::new(
+        "Fig. 19 — average CRNM per region",
+        &["region", "crnm", "severity"],
+    );
+    for (i, m) in report.disparity.means.iter().enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            f4(*m),
+            report.disparity.kmeans.severities[i].name().to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    let rc = report.disparity_causes.as_ref().unwrap();
+    out.push_str(&format!("root causes: {:?} [paper: {{a4, a5}}]\n", rc.cause_names()));
+    // Paper magnitudes: region 6 ≈ 96 % of instructions; region 7 ≈
+    // 50 % of (sent) network bytes.
+    let instr_total: f64 = (1..=16)
+        .map(|r| {
+            (0..trace.nprocs())
+                .map(|p| trace.sample(p, RegionId(r)).instructions)
+                .sum::<f64>()
+        })
+        .sum();
+    let instr6: f64 = (0..trace.nprocs())
+        .map(|p| trace.sample(p, RegionId(6)).instructions)
+        .sum();
+    let net_total: f64 = (1..=16)
+        .map(|r| {
+            (0..trace.nprocs())
+                .map(|p| trace.sample(p, RegionId(r)).mpi_bytes)
+                .sum::<f64>()
+        })
+        .sum();
+    let net7: f64 = (0..trace.nprocs())
+        .map(|p| trace.sample(p, RegionId(7)).mpi_bytes)
+        .sum();
+    out.push_str(&format!(
+        "region 6 instructions: {:.1}% of total [paper 96%]; region 7 network: {:.1}% [paper 50%]\n",
+        100.0 * instr6 / instr_total,
+        100.0 * net7 / net_total
+    ));
+    out.push_str("verdict: bottlenecks not optimizable (mature compressor; data already compressed)\n");
+    ensure!(report.dissimilarity.clustering.is_uniform());
+    ensure!(ids(&report.disparity.cccrs) == vec![6, 7], "CCCRs {:?}", report.disparity.cccrs);
+    ensure!(
+        rc.cause_names() == vec!["network I/O quantity", "instructions retired"],
+        "causes {:?}",
+        rc.cause_names()
+    );
+    ensure!(instr6 / instr_total > 0.9);
+    ensure!(net7 / net_total > 0.4);
+    ensure!(crate::workloads::optimize::mpibzip2_fixes().is_none());
+    Ok(out)
+}
+
+// --- E11: Fig. 20-23 + §6.4 ----------------------------------------------
+fn fig20_23(backend: &dyn ClusterBackend) -> Result<String> {
+    // Fine-grain shot count per the paper (§6.4 uses shots = 300), but
+    // the COARSE region tree — the study is about metrics, not grain.
+    let mut params = StParams::default();
+    params.shots = st::SHOTS_FINE;
+    let trace = simulate(&st_coarse(&params), SEED);
+
+    let mut out = String::from("# Fig. 20-23 + §6.4 — effect of metric choice\n");
+
+    // Fig. 20: average wall vs CPU clock per region.
+    let mut t20 = Table::new(
+        "Fig. 20 — average wall vs CPU clock time per ST region",
+        &["region", "wall (s)", "cpu (s)"],
+    );
+    for r in 1..=trace.nregions() {
+        t20.row(&[
+            r.to_string(),
+            f2(trace.region_mean(RegionId(r), |s| s.wall)),
+            f2(trace.region_mean(RegionId(r), |s| s.cpu)),
+        ]);
+    }
+    out.push_str(&t20.render());
+
+    // Fig. 22: CPI per region.
+    let mut t22 = Table::new("Fig. 22 — average CPI per ST region", &["region", "cpi"]);
+    for r in 1..=trace.nregions() {
+        let cyc = trace.region_mean(RegionId(r), |s| s.cycles);
+        let ins = trace.region_mean(RegionId(r), |s| s.instructions);
+        t22.row(&[r.to_string(), f2(cyc / ins.max(1.0))]);
+    }
+    out.push_str(&t22.render());
+
+    // Fig. 23: per-process wall/CPU of region 11.
+    let wall11 = region_series(&trace, RegionId(11), MetricView::Plain(Metric::WallClock));
+    let cpu11 = region_series(&trace, RegionId(11), MetricView::Plain(Metric::CpuClock));
+    let mut t23 = Table::new(
+        "Fig. 23 — wall vs CPU clock of region 11 per process",
+        &["process", "wall (s)", "cpu (s)"],
+    );
+    for p in 0..trace.nprocs() {
+        t23.row(&[p.to_string(), f2(wall11[p]), f2(cpu11[p])]);
+    }
+    out.push_str(&t23.render());
+
+    // The detector comparison.
+    let crnm = disparity_search(&trace, backend, MetricView::Crnm)?;
+    let wallm = disparity_search(&trace, backend, MetricView::Plain(Metric::WallClock))?;
+    let cpim = disparity_search(&trace, backend, MetricView::Plain(Metric::Cpi))?;
+    let mut cmp = Table::new(
+        "§6.4 — disparity bottlenecks found per metric",
+        &["metric", "flagged regions", "paper"],
+    );
+    let fmt = |v: &[RegionId]| {
+        v.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",")
+    };
+    cmp.row(&["CRNM".into(), fmt(&crnm.ccrs), "8,11,14".into()]);
+    cmp.row(&[
+        "wall clock".into(),
+        fmt(&wallm.ccrs),
+        "2,5,6,10 + 8,11,14 (over-report)".into(),
+    ]);
+    cmp.row(&["CPI".into(), fmt(&cpim.ccrs), "2,8 (misses 11,14)".into()]);
+    out.push_str(&cmp.render());
+
+    // Dissimilarity: wall vs CPU clock.
+    let dis_cpu = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::CpuClock))?;
+    let dis_wall = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::WallClock))?;
+    out.push_str(&format!(
+        "dissimilarity detection: cpu -> {} clusters {:?}; wall -> {} clusters {:?}\n\
+         [paper: both metrics detect the imbalance identically; our wall-clock run\n\
+          detects the same clusters but cannot *locate* region 11 — barrier waits in\n\
+          regions 5/6 mask the source, a stronger argument for the CPU clock]\n",
+        dis_cpu.clustering.num_clusters(),
+        dis_cpu.clustering.clusters(),
+        dis_wall.clustering.num_clusters(),
+        dis_wall.clustering.clusters(),
+    ));
+
+    ensure!(ids(&crnm.ccrs) == vec![8, 11, 14], "CRNM {:?}", crnm.ccrs);
+    ensure!(ids(&cpim.ccrs) == vec![2, 8], "CPI {:?}", cpim.ccrs);
+    let wall_ids = ids(&wallm.ccrs);
+    ensure!(
+        wall_ids.contains(&5) && wall_ids.contains(&6) && wall_ids.len() > 3,
+        "wall over-reports: {:?}",
+        wall_ids
+    );
+    ensure!(dis_cpu.clustering.clusters() == dis_wall.clustering.clusters());
+    ensure!(ids(&dis_cpu.cccrs) == vec![11]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+
+    /// Every experiment regenerates and its shape assertions hold on
+    /// the native backend. (The PJRT equivalence is covered by the
+    /// integration tests in rust/tests/.)
+    #[test]
+    fn all_experiments_pass_native() {
+        for e in EXPERIMENTS {
+            let out = (e.run)(&NativeBackend)
+                .unwrap_or_else(|err| panic!("experiment {} failed: {err:#}", e.id));
+            assert!(!out.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run_experiment("fig99", &NativeBackend).is_err());
+    }
+}

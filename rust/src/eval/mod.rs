@@ -1,0 +1,9 @@
+//! Evaluation harness: one regenerator per table/figure of the paper's
+//! §6 (see DESIGN.md §4 for the experiment index), plus the
+//! micro-benchmark support used by `rust/benches/` (criterion is not
+//! available offline — `bench` implements warmup/measure/report).
+
+pub mod bench;
+pub mod experiments;
+
+pub use experiments::{run_experiment, Experiment, EXPERIMENTS};

@@ -1,0 +1,26 @@
+//! AutoAnalyzer — automatic performance debugging of SPMD-style parallel
+//! programs (Liu, Zhan, Zhan, Shi, Yuan, Meng, Wang; JPDC 2011).
+//!
+//! Pipeline (paper Fig. 6): instrument a program into a code-region tree
+//! (`regions`), collect per-process × per-region performance data
+//! (`simulator` stands in for the paper's PAPI/PMPI/systemtap collectors;
+//! `trace` is the data-management layer), detect + locate dissimilarity
+//! and disparity bottlenecks (`cluster`, `search`), and uncover their
+//! root causes with rough set theory (`roughset`, `analysis`).
+//!
+//! The clustering hot spot executes JAX/Pallas AOT artifacts through
+//! PJRT (`runtime`, `cluster::PjrtBackend`) with a numerically equivalent
+//! native fallback (`cluster::NativeBackend`). See DESIGN.md.
+pub mod analysis;
+pub mod cluster;
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod regions;
+pub mod roughset;
+pub mod runtime;
+pub mod search;
+pub mod trace;
+pub mod simulator;
+pub mod util;
+pub mod workloads;

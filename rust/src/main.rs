@@ -1,0 +1,302 @@
+//! AutoAnalyzer CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   reproduce      regenerate the paper's tables/figures (DESIGN.md §4)
+//!   analyze        simulate a workload and run the full pipeline
+//!   analyze-trace  run the pipeline over a saved trace (JSON or XML)
+//!   simulate       simulate a workload and save the trace
+//!   serve          coordinator service demo: stream analysis jobs
+//!   list           list workloads and experiments
+//!
+//! `--backend auto|native|pjrt` selects the clustering engine; `auto`
+//! (default) uses the PJRT artifacts when `artifacts/` exists and falls
+//! back to native otherwise.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::backend::select_backend;
+use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::eval::{run_experiment, EXPERIMENTS};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::{json_codec, xml_codec, Trace};
+use autoanalyzer::util::cli::Args;
+use autoanalyzer::workloads::npar1way::{npar1way, NparParams};
+use autoanalyzer::workloads::optimize;
+use autoanalyzer::workloads::spec::WorkloadSpec;
+use autoanalyzer::workloads::st::{st_coarse, StParams};
+use autoanalyzer::workloads::st_fine::st_fine;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+use autoanalyzer::workloads::{mpibzip2, st};
+
+const USAGE: &str = "\
+autoanalyzer — automatic performance debugging of SPMD-style parallel programs
+
+USAGE:
+  autoanalyzer reproduce [--experiment <id>|all] [--backend auto|native|pjrt]
+  autoanalyzer analyze --workload <name> [--variant <v>] [--seed N]
+                       [--backend ...] [--save-trace FILE]
+  autoanalyzer analyze-trace <FILE> [--backend ...]
+  autoanalyzer simulate --workload <name> [--seed N] --out FILE [--format json|xml]
+  autoanalyzer serve [--jobs N] [--workers K] [--backend ...]
+  autoanalyzer list
+
+WORKLOADS:
+  st           the ST seismic-tomography production code (627 shots, Fig. 8)
+  st-fine      fine-grain ST (300 shots, Fig. 15)
+  npar1way     SAS NPAR1WAY exact p-value module
+  mpibzip2     parallel bzip2 (Fig. 18)
+  synthetic    generated app; --inject imbalance|disk|net|cache|instr --region R
+
+VARIANTS (for st / npar1way):
+  original | fix-dissimilarity | fix-disparity | fix-both | cse
+";
+
+fn build_workload(args: &Args) -> Result<WorkloadSpec> {
+    let name = args
+        .str_opt("workload")
+        .context("--workload is required (see `autoanalyzer list`)")?;
+    let variant = args.str_or("variant", "original");
+    let spec = match name {
+        "st" => {
+            let p = StParams {
+                shots: args.f64_or("shots", st::SHOTS_COARSE)?,
+                ..StParams::default()
+            };
+            let p = match variant {
+                "original" => p,
+                "fix-dissimilarity" => optimize::st_fix_dissimilarity(&p),
+                "fix-disparity" => optimize::st_fix_disparity(&p),
+                "fix-both" => optimize::st_fix_both(&p),
+                other => bail!("unknown st variant '{other}'"),
+            };
+            st_coarse(&p)
+        }
+        "st-fine" => st_fine(&StParams::default()),
+        "npar1way" => {
+            let p = NparParams::default();
+            let p = match variant {
+                "original" => p,
+                "cse" => optimize::npar_fix(&p),
+                other => bail!("unknown npar1way variant '{other}'"),
+            };
+            npar1way(&p)
+        }
+        "mpibzip2" => mpibzip2::mpibzip2(),
+        "synthetic" => {
+            let seed = args.u64_or("seed", 7)?;
+            let nregions = args.usize_or("regions", 10)?;
+            let nprocs = args.usize_or("procs", 8)?;
+            let mut injections = Vec::new();
+            if let Some(kind) = args.str_opt("inject") {
+                let region = args.usize_or("region", 3)?;
+                let inj = match kind {
+                    "imbalance" => Inject::Imbalance,
+                    "disk" => Inject::DiskHog,
+                    "net" => Inject::NetHog,
+                    "cache" => Inject::CacheThrash,
+                    "instr" => Inject::InstrHog,
+                    other => bail!("unknown injection '{other}'"),
+                };
+                injections.push((region, inj));
+            }
+            synthetic(nprocs, nregions, &injections, seed)
+        }
+        other => bail!("unknown workload '{other}' (see `autoanalyzer list`)"),
+    };
+    Ok(spec)
+}
+
+fn load_trace(path: &str) -> Result<Trace> {
+    if path.ends_with(".xml") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        xml_codec::from_xml(&text)
+    } else {
+        json_codec::load(std::path::Path::new(path))
+    }
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let backend = select_backend(
+        args.str_or("backend", "auto"),
+        args.str_or("artifacts", "artifacts"),
+    )?;
+    let which = args.str_or("experiment", "all");
+    let start = Instant::now();
+    let mut failures = 0;
+    for e in EXPERIMENTS {
+        if which != "all" && which != e.id {
+            continue;
+        }
+        println!("==================== {} :: {} ====================", e.id, e.paper);
+        match run_experiment(e.id, backend.as_ref()) {
+            Ok(out) => println!("{out}"),
+            Err(err) => {
+                failures += 1;
+                println!("EXPERIMENT {} FAILED: {err:#}\n", e.id);
+            }
+        }
+    }
+    println!(
+        "reproduce: done in {:.2}s on the {} backend ({failures} failures)",
+        start.elapsed().as_secs_f64(),
+        backend.name()
+    );
+    if failures > 0 {
+        bail!("{failures} experiment(s) failed");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let spec = build_workload(args)?;
+    let seed = args.u64_or("seed", 2011)?;
+    let trace = simulate(&spec, seed);
+    if let Some(path) = args.str_opt("save-trace") {
+        json_codec::save(&trace, std::path::Path::new(path))?;
+        eprintln!("trace saved to {path}");
+    }
+    let backend = select_backend(
+        args.str_or("backend", "auto"),
+        args.str_or("artifacts", "artifacts"),
+    )?;
+    let start = Instant::now();
+    let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
+    println!("{}", report.render());
+    eprintln!("analysis took {:.1} ms", start.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_analyze_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional(1)
+        .context("usage: autoanalyzer analyze-trace <FILE>")?;
+    let trace = load_trace(path)?;
+    let backend = select_backend(
+        args.str_or("backend", "auto"),
+        args.str_or("artifacts", "artifacts"),
+    )?;
+    let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let spec = build_workload(args)?;
+    let seed = args.u64_or("seed", 2011)?;
+    let trace = simulate(&spec, seed);
+    let out = args.str_opt("out").context("--out FILE is required")?;
+    match args.str_or("format", "json") {
+        "json" => json_codec::save(&trace, std::path::Path::new(out))?,
+        "xml" => std::fs::write(out, xml_codec::to_xml(&trace))?,
+        other => bail!("unknown format '{other}'"),
+    }
+    println!(
+        "simulated {} ({} procs, {} regions, wall {:.1}s) -> {}",
+        trace.tree.program(),
+        trace.nprocs(),
+        trace.nregions(),
+        trace.run_wall(),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.usize_or("jobs", 64)?;
+    let workers = args.usize_or("workers", 4)?;
+    let backend_name = args.str_or("backend", "auto").to_string();
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    let (coord, rx) = Coordinator::start(workers, 16, move || {
+        select_backend(&backend_name, &artifacts)
+    });
+    let start = Instant::now();
+    let producer = {
+        let n = jobs as u64;
+        std::thread::spawn(move || -> Vec<AnalysisJob> {
+            // Jobs built on the producer thread; coordinator consumes.
+            (0..n)
+                .map(|i| {
+                    let inj = match i % 4 {
+                        0 => vec![(2usize, Inject::Imbalance)],
+                        1 => vec![(3usize, Inject::DiskHog)],
+                        2 => vec![(4usize, Inject::CacheThrash)],
+                        _ => vec![],
+                    };
+                    let spec = synthetic(8, 12, &inj, i);
+                    AnalysisJob {
+                        id: i,
+                        trace: simulate(&spec, i),
+                        config: AnalysisConfig::default(),
+                    }
+                })
+                .collect()
+        })
+    };
+    for job in producer.join().expect("producer") {
+        coord.submit(job);
+    }
+    let mut latencies = Vec::new();
+    for _ in 0..jobs {
+        let outcome = rx.recv()?;
+        if let Some(err) = outcome.error {
+            eprintln!("job {} failed: {err}", outcome.id);
+        } else {
+            latencies.push(outcome.latency.as_secs_f64());
+            if outcome.id < 4 {
+                println!("job {}: {}", outcome.id, outcome.summary);
+            }
+        }
+    }
+    let wall = start.elapsed();
+    println!(
+        "served {jobs} analyses on {workers} workers in {:.2}s -> {:.1} jobs/s, \
+         p50 {:.1} ms, p99 {:.1} ms",
+        wall.as_secs_f64(),
+        coord.stats.throughput(wall),
+        autoanalyzer::util::stats::percentile(&latencies, 50.0) * 1e3,
+        autoanalyzer::util::stats::percentile(&latencies, 99.0) * 1e3,
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_list() {
+    println!("workloads: st, st-fine, npar1way, mpibzip2, synthetic");
+    println!("experiments:");
+    for e in EXPERIMENTS {
+        println!("  {:10} {}", e.id, e.paper);
+    }
+}
+
+fn main() {
+    let args = match Args::from_env(&["help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.positional(0) {
+        Some("reproduce") => cmd_reproduce(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("analyze-trace") => cmd_analyze_trace(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("list") => {
+            cmd_list();
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

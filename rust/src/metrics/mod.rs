@@ -1,0 +1,13 @@
+//! Performance data model (paper §4.1).
+//!
+//! Per process × code region, AutoAnalyzer collects four hierarchies of
+//! data: application (wall/CPU clock), hardware counters (cycles,
+//! instructions, L1/L2 miss+access), parallel interface (MPI time +
+//! bytes) and OS (disk-I/O bytes). Derived metrics: L1/L2 miss rate,
+//! CPI, and the paper's CRNM = (CRWT / WPWT) · CPI.
+
+pub mod sample;
+pub mod vectors;
+
+pub use sample::{Metric, RegionSample};
+pub use vectors::{perf_matrix, region_means, region_series, MetricView};

@@ -1,0 +1,243 @@
+//! Raw and derived per-region performance measurements.
+
+/// The metrics AutoAnalyzer collects or derives (paper §4.1 + §4.4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Application hierarchy.
+    WallClock,
+    CpuClock,
+    /// Hardware counter hierarchy.
+    Cycles,
+    Instructions,
+    L1Miss,
+    L1Access,
+    L2Miss,
+    L2Access,
+    /// Parallel-interface hierarchy (MPI wrapper).
+    MpiTime,
+    MpiBytes,
+    /// OS hierarchy (systemtap analog).
+    DiskBytes,
+    /// Derived.
+    L1MissRate,
+    L2MissRate,
+    Cpi,
+    /// The paper's code-region normalized metric (needs WPWT context —
+    /// see `RegionSample::crnm`).
+    Crnm,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::WallClock => "wall_clock",
+            Metric::CpuClock => "cpu_clock",
+            Metric::Cycles => "cycles",
+            Metric::Instructions => "instructions",
+            Metric::L1Miss => "l1_miss",
+            Metric::L1Access => "l1_access",
+            Metric::L2Miss => "l2_miss",
+            Metric::L2Access => "l2_access",
+            Metric::MpiTime => "mpi_time",
+            Metric::MpiBytes => "mpi_bytes",
+            Metric::DiskBytes => "disk_bytes",
+            Metric::L1MissRate => "l1_miss_rate",
+            Metric::L2MissRate => "l2_miss_rate",
+            Metric::Cpi => "cpi",
+            Metric::Crnm => "crnm",
+        }
+    }
+
+    /// The five rough-set condition attributes a1..a5 (paper §4.4.2):
+    /// L1 miss rate, L2 miss rate, disk I/O quantity, network I/O
+    /// quantity, instructions retired.
+    pub fn rough_set_attrs() -> [Metric; 5] {
+        [
+            Metric::L1MissRate,
+            Metric::L2MissRate,
+            Metric::DiskBytes,
+            Metric::MpiBytes,
+            Metric::Instructions,
+        ]
+    }
+}
+
+/// One (process, code region) measurement tuple.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RegionSample {
+    /// Seconds a wall clock would measure (includes waits).
+    pub wall: f64,
+    /// Seconds the processor actively worked (excludes waits).
+    pub cpu: f64,
+    /// Core clock cycles consumed.
+    pub cycles: f64,
+    /// Instructions retired.
+    pub instructions: f64,
+    pub l1_miss: f64,
+    pub l1_access: f64,
+    pub l2_miss: f64,
+    pub l2_access: f64,
+    /// Time spent inside the MPI library.
+    pub mpi_time: f64,
+    /// Bytes moved through the MPI library ("network I/O quantity").
+    pub mpi_bytes: f64,
+    /// Bytes read+written by disk I/O.
+    pub disk_bytes: f64,
+}
+
+impl RegionSample {
+    pub fn l1_miss_rate(&self) -> f64 {
+        if self.l1_access <= 0.0 {
+            0.0
+        } else {
+            self.l1_miss / self.l1_access
+        }
+    }
+
+    pub fn l2_miss_rate(&self) -> f64 {
+        if self.l2_access <= 0.0 {
+            0.0
+        } else {
+            self.l2_miss / self.l2_access
+        }
+    }
+
+    /// Cycles per instruction; 0 when the region retired nothing (e.g.
+    /// a region absent from this process's call path — the paper then
+    /// also defines its CRNM as 0).
+    pub fn cpi(&self) -> f64 {
+        if self.instructions <= 0.0 {
+            0.0
+        } else {
+            self.cycles / self.instructions
+        }
+    }
+
+    /// Code-region normalized metric, Equation (2):
+    /// CRNM = (CRWT / WPWT) * CPI.
+    pub fn crnm(&self, whole_program_wall: f64) -> f64 {
+        if whole_program_wall <= 0.0 {
+            0.0
+        } else {
+            (self.wall / whole_program_wall) * self.cpi()
+        }
+    }
+
+    /// Fetch a metric value (derived ones computed on the fly).
+    /// `Crnm` needs the program wall time, so it goes through
+    /// `crnm(...)`; requesting it here panics loudly instead of lying.
+    pub fn get(&self, m: Metric) -> f64 {
+        match m {
+            Metric::WallClock => self.wall,
+            Metric::CpuClock => self.cpu,
+            Metric::Cycles => self.cycles,
+            Metric::Instructions => self.instructions,
+            Metric::L1Miss => self.l1_miss,
+            Metric::L1Access => self.l1_access,
+            Metric::L2Miss => self.l2_miss,
+            Metric::L2Access => self.l2_access,
+            Metric::MpiTime => self.mpi_time,
+            Metric::MpiBytes => self.mpi_bytes,
+            Metric::DiskBytes => self.disk_bytes,
+            Metric::L1MissRate => self.l1_miss_rate(),
+            Metric::L2MissRate => self.l2_miss_rate(),
+            Metric::Cpi => self.cpi(),
+            Metric::Crnm => panic!("CRNM needs program wall time; use crnm(wpwt)"),
+        }
+    }
+
+    /// Accumulate another sample into this one (used when merging
+    /// composite code regions for Algorithm 2's fallback, and when
+    /// aggregating children into a parent).
+    pub fn add(&mut self, other: &RegionSample) {
+        self.wall += other.wall;
+        self.cpu += other.cpu;
+        self.cycles += other.cycles;
+        self.instructions += other.instructions;
+        self.l1_miss += other.l1_miss;
+        self.l1_access += other.l1_access;
+        self.l2_miss += other.l2_miss;
+        self.l2_access += other.l2_access;
+        self.mpi_time += other.mpi_time;
+        self.mpi_bytes += other.mpi_bytes;
+        self.disk_bytes += other.disk_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RegionSample {
+        RegionSample {
+            wall: 10.0,
+            cpu: 8.0,
+            cycles: 16e9,
+            instructions: 8e9,
+            l1_miss: 1e6,
+            l1_access: 1e8,
+            l2_miss: 5e5,
+            l2_access: 1e6,
+            mpi_time: 1.0,
+            mpi_bytes: 1e6,
+            disk_bytes: 2e9,
+        }
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let s = sample();
+        assert!((s.cpi() - 2.0).abs() < 1e-12);
+        assert!((s.l1_miss_rate() - 0.01).abs() < 1e-12);
+        assert!((s.l2_miss_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crnm_equation_2() {
+        let s = sample();
+        // (10 / 100) * 2.0 = 0.2
+        assert!((s.crnm(100.0) - 0.2).abs() < 1e-12);
+        assert_eq!(s.crnm(0.0), 0.0);
+    }
+
+    #[test]
+    fn zero_denominators_are_safe() {
+        let z = RegionSample::default();
+        assert_eq!(z.cpi(), 0.0);
+        assert_eq!(z.l1_miss_rate(), 0.0);
+        assert_eq!(z.l2_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn get_matches_fields() {
+        let s = sample();
+        assert_eq!(s.get(Metric::WallClock), 10.0);
+        assert_eq!(s.get(Metric::DiskBytes), 2e9);
+        assert_eq!(s.get(Metric::Cpi), s.cpi());
+    }
+
+    #[test]
+    #[should_panic(expected = "CRNM")]
+    fn get_crnm_panics() {
+        sample().get(Metric::Crnm);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = sample();
+        a.add(&sample());
+        assert_eq!(a.wall, 20.0);
+        assert_eq!(a.instructions, 16e9);
+        // CPI invariant under uniform scaling.
+        assert!((a.cpi() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attrs_are_the_papers_five() {
+        let names: Vec<&str> = Metric::rough_set_attrs().iter().map(|m| m.name()).collect();
+        assert_eq!(
+            names,
+            vec!["l1_miss_rate", "l2_miss_rate", "disk_bytes", "mpi_bytes", "instructions"]
+        );
+    }
+}

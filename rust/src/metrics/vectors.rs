@@ -1,0 +1,144 @@
+//! Performance-vector assembly (paper §4.2.1).
+//!
+//! Each process i is represented by V_i = (T_i1 .. T_in) over the n code
+//! regions, for a chosen metric. Management regions of the master
+//! process are zeroed (the paper excludes them from similarity
+//! analysis); regions absent from a process's call path are naturally
+//! zero.
+
+use crate::metrics::{Metric, RegionSample};
+use crate::regions::RegionId;
+use crate::trace::Trace;
+use crate::util::matrix::Matrix;
+
+/// A metric selector that knows how to resolve context-dependent
+/// metrics (CRNM needs the whole-program wall time of the process).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricView {
+    Plain(Metric),
+    /// Equation (2): (CRWT / WPWT) * CPI.
+    Crnm,
+}
+
+impl MetricView {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricView::Plain(m) => m.name(),
+            MetricView::Crnm => "crnm",
+        }
+    }
+
+    pub fn value(&self, sample: &RegionSample, program_wall: f64) -> f64 {
+        match self {
+            MetricView::Plain(m) => sample.get(*m),
+            MetricView::Crnm => sample.crnm(program_wall),
+        }
+    }
+}
+
+/// Build the m x n performance matrix (process rows, region columns,
+/// region ids 1..=n map to columns 0..n-1). Master-process management
+/// regions are zeroed.
+pub fn perf_matrix(trace: &Trace, view: MetricView) -> Matrix {
+    let m = trace.nprocs();
+    let n = trace.nregions();
+    let mut out = Matrix::zeros(m, n);
+    for p in 0..m {
+        let wpwt = trace.program_wall(p);
+        for r in 1..=n {
+            if trace.excluded(p, RegionId(r)) {
+                continue;
+            }
+            out[(p, r - 1)] = view.value(trace.sample(p, RegionId(r)), wpwt) as f32;
+        }
+    }
+    out
+}
+
+/// Per-region mean of a metric across all processes (the disparity
+/// analysis averages "among all processes or threads", §4.2.2).
+pub fn region_means(trace: &Trace, view: MetricView) -> Vec<f64> {
+    let m = trace.nprocs().max(1);
+    (1..=trace.nregions())
+        .map(|r| {
+            (0..trace.nprocs())
+                .map(|p| view.value(trace.sample(p, RegionId(r)), trace.program_wall(p)))
+                .sum::<f64>()
+                / m as f64
+        })
+        .collect()
+}
+
+/// Per-process values of one region (Fig. 11 / Fig. 23-style series).
+pub fn region_series(trace: &Trace, region: RegionId, view: MetricView) -> Vec<f64> {
+    (0..trace.nprocs())
+        .map(|p| view.value(trace.sample(p, region), trace.program_wall(p)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regions::RegionTree;
+
+    fn trace() -> Trace {
+        let mut tree = RegionTree::new("t");
+        tree.add(RegionId(0), "r1");
+        tree.add_management(RegionId(0), "r2-mgmt");
+        let mut t = Trace::new(tree, 2);
+        t.master_rank = Some(0);
+        for p in 0..2 {
+            t.sample_mut(p, RegionId(0)).wall = 100.0;
+            let s1 = t.sample_mut(p, RegionId(1));
+            s1.wall = 50.0;
+            s1.cpu = 40.0 + p as f64;
+            s1.cycles = 2e9;
+            s1.instructions = 1e9;
+            let s2 = t.sample_mut(p, RegionId(2));
+            s2.cpu = 7.0;
+            s2.wall = 8.0;
+            s2.cycles = 1e9;
+            s2.instructions = 1e9;
+        }
+        t
+    }
+
+    #[test]
+    fn matrix_layout() {
+        let t = trace();
+        let m = perf_matrix(&t, MetricView::Plain(Metric::CpuClock));
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m[(0, 0)], 40.0);
+        assert_eq!(m[(1, 0)], 41.0);
+    }
+
+    #[test]
+    fn master_management_zeroed() {
+        let t = trace();
+        let m = perf_matrix(&t, MetricView::Plain(Metric::CpuClock));
+        assert_eq!(m[(0, 1)], 0.0, "master's management region excluded");
+        assert_eq!(m[(1, 1)], 7.0, "worker keeps the value");
+    }
+
+    #[test]
+    fn crnm_view() {
+        let t = trace();
+        let m = perf_matrix(&t, MetricView::Crnm);
+        // region 1: (50/100) * (2e9/1e9) = 1.0 — for both processes.
+        assert!((m[(0, 0)] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn region_means_average() {
+        let t = trace();
+        let means = region_means(&t, MetricView::Plain(Metric::CpuClock));
+        assert!((means[0] - 40.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn region_series_per_process() {
+        let t = trace();
+        let s = region_series(&t, RegionId(1), MetricView::Plain(Metric::CpuClock));
+        assert_eq!(s, vec![40.0, 41.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Code-region trees (paper §2).
+//!
+//! A *code region* is a single-entry/single-exit section of code
+//! (function, subroutine, loop). Regions of equal depth never overlap;
+//! nesting is encouraged because it narrows the scope of located
+//! bottlenecks. The whole program is the root; a region of depth L is an
+//! "L-code region". AutoAnalyzer's searches (Algorithm 2, disparity
+//! refinement) walk this tree.
+
+pub mod tree;
+
+pub use tree::{RegionId, RegionInfo, RegionTree};

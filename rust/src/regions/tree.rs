@@ -1,0 +1,379 @@
+//! The code-region tree structure and its queries.
+
+use std::fmt;
+
+/// Index into `RegionTree::nodes`. Id 0 is always the program root; the
+/// paper's "code region j" ids are 1..=n and we preserve them (workload
+//  models use the paper's numbering from Fig. 8/15/18).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RegionId(pub usize);
+
+impl fmt::Display for RegionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RegionInfo {
+    pub id: RegionId,
+    pub name: String,
+    pub parent: Option<RegionId>,
+    pub children: Vec<RegionId>,
+    /// Root has depth 0; "L-code regions" have depth L.
+    pub depth: usize,
+    /// Management routines in the master process (excluded from the
+    /// dissimilarity analysis, §4.2.1).
+    pub management: bool,
+}
+
+/// The code-region tree of one instrumented program.
+#[derive(Debug, Clone)]
+pub struct RegionTree {
+    nodes: Vec<RegionInfo>,
+    program: String,
+}
+
+impl RegionTree {
+    pub fn new(program: &str) -> RegionTree {
+        RegionTree {
+            nodes: vec![RegionInfo {
+                id: RegionId(0),
+                name: program.to_string(),
+                parent: None,
+                children: Vec::new(),
+                depth: 0,
+                management: false,
+            }],
+            program: program.to_string(),
+        }
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Build a tree from explicit (id, parent, name, management)
+    /// tuples. Ids must be dense 1..=n but may appear in any order and
+    /// children may carry *smaller* ids than their parents — the
+    /// paper's Fig. 8 numbers `ramod3`'s inner regions 11 and 12 under
+    /// region 14.
+    pub fn from_nodes(
+        program: &str,
+        nodes: &[(usize, usize, &str, bool)],
+    ) -> Result<RegionTree, String> {
+        let n = nodes.len();
+        let mut tree = RegionTree::new(program);
+        tree.nodes
+            .resize(n + 1, tree.nodes[0].clone());
+        let mut seen = vec![false; n + 1];
+        seen[0] = true;
+        for &(id, parent, name, management) in nodes {
+            if id == 0 || id > n {
+                return Err(format!("region id {id} out of range 1..={n}"));
+            }
+            if seen[id] {
+                return Err(format!("duplicate region id {id}"));
+            }
+            seen[id] = true;
+            if parent > n {
+                return Err(format!("region {id} has unknown parent {parent}"));
+            }
+            tree.nodes[id] = RegionInfo {
+                id: RegionId(id),
+                name: name.to_string(),
+                parent: Some(RegionId(parent)),
+                children: Vec::new(),
+                depth: 0, // fixed below
+                management,
+            };
+        }
+        // Children lists in id order.
+        for id in 1..=n {
+            let parent = tree.nodes[id].parent.unwrap();
+            tree.nodes[parent.0].children.push(RegionId(id));
+        }
+        // Depths via path-to-root walks (with cycle detection).
+        for id in 1..=n {
+            let mut depth = 0usize;
+            let mut cur = id;
+            loop {
+                let p = tree.nodes[cur].parent.unwrap().0;
+                depth += 1;
+                if p == 0 {
+                    break;
+                }
+                if depth > n {
+                    return Err(format!("cycle through region {id}"));
+                }
+                cur = p;
+            }
+            tree.nodes[id].depth = depth;
+        }
+        Ok(tree)
+    }
+
+    /// Add a region under `parent` (use `RegionId(0)` for a 1-code
+    /// region). Returns the new region's id (sequential, 1-based —
+    /// matching the paper's numbering when regions are added in paper
+    /// order).
+    pub fn add(&mut self, parent: RegionId, name: &str) -> RegionId {
+        self.add_full(parent, name, false)
+    }
+
+    pub fn add_management(&mut self, parent: RegionId, name: &str) -> RegionId {
+        self.add_full(parent, name, true)
+    }
+
+    fn add_full(&mut self, parent: RegionId, name: &str, management: bool) -> RegionId {
+        assert!(parent.0 < self.nodes.len(), "unknown parent {parent}");
+        let id = RegionId(self.nodes.len());
+        let depth = self.nodes[parent.0].depth + 1;
+        self.nodes.push(RegionInfo {
+            id,
+            name: name.to_string(),
+            parent: Some(parent),
+            children: Vec::new(),
+            depth,
+            management,
+        });
+        self.nodes[parent.0].children.push(id);
+        id
+    }
+
+    /// Number of code regions, excluding the root.
+    pub fn len(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn info(&self, id: RegionId) -> &RegionInfo {
+        &self.nodes[id.0]
+    }
+
+    pub fn depth(&self, id: RegionId) -> usize {
+        self.nodes[id.0].depth
+    }
+
+    pub fn parent(&self, id: RegionId) -> Option<RegionId> {
+        self.nodes[id.0].parent
+    }
+
+    pub fn children(&self, id: RegionId) -> &[RegionId] {
+        &self.nodes[id.0].children
+    }
+
+    pub fn is_leaf(&self, id: RegionId) -> bool {
+        self.nodes[id.0].children.is_empty()
+    }
+
+    /// All region ids (1..=n), excluding the root.
+    pub fn region_ids(&self) -> impl Iterator<Item = RegionId> + '_ {
+        (1..self.nodes.len()).map(RegionId)
+    }
+
+    /// Regions of depth exactly `l` ("L-code regions").
+    pub fn at_depth(&self, l: usize) -> Vec<RegionId> {
+        self.region_ids()
+            .filter(|&id| self.depth(id) == l)
+            .collect()
+    }
+
+    /// The subtree rooted at `id` (inclusive), preorder.
+    pub fn subtree(&self, id: RegionId) -> Vec<RegionId> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(cur) = stack.pop() {
+            out.push(cur);
+            for &c in self.children(cur).iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    /// Path from the root (exclusive) down to `id` (inclusive).
+    pub fn path(&self, id: RegionId) -> Vec<RegionId> {
+        let mut out = vec![id];
+        let mut cur = id;
+        while let Some(p) = self.parent(cur) {
+            if p.0 == 0 {
+                break;
+            }
+            out.push(p);
+            cur = p;
+        }
+        out.reverse();
+        out
+    }
+
+    /// True if `anc` is a strict ancestor of `id`.
+    pub fn is_ancestor(&self, anc: RegionId, id: RegionId) -> bool {
+        let mut cur = self.parent(id);
+        while let Some(p) = cur {
+            if p == anc {
+                return true;
+            }
+            cur = self.parent(p);
+        }
+        false
+    }
+
+    /// Validate the paper's structural constraint: same-depth regions
+    /// never overlap. In a tree this is by construction; what we check
+    /// is id/parent/depth consistency (used by trace loading, where
+    /// trees arrive from files).
+    pub fn validate(&self) -> Result<(), String> {
+        for n in &self.nodes[1..] {
+            let p = n.parent.ok_or_else(|| format!("region {} has no parent", n.id))?;
+            if p.0 >= self.nodes.len() {
+                return Err(format!("region {} parent {} out of range", n.id, p));
+            }
+            if self.nodes[p.0].depth + 1 != n.depth {
+                return Err(format!("region {} depth mismatch", n.id));
+            }
+            if !self.nodes[p.0].children.contains(&n.id) {
+                return Err(format!("region {} missing from parent's children", n.id));
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the tree like Fig. 8: one line per region with nesting.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_node(RegionId(0), 0, &mut out);
+        out
+    }
+
+    fn render_node(&self, id: RegionId, indent: usize, out: &mut String) {
+        let info = self.info(id);
+        let label = if id.0 == 0 {
+            format!("[{}]", self.program)
+        } else {
+            format!("code region {} ({})", id, info.name)
+        };
+        out.push_str(&"  ".repeat(indent));
+        out.push_str(&label);
+        if info.management {
+            out.push_str(" [management]");
+        }
+        out.push('\n');
+        for &c in &info.children {
+            self.render_node(c, indent + 1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig. 1 example tree: 1-code regions 1..3, region 4,6 nested
+    /// in 1, region 5,7 nested in 2, region 8 nested in 6.
+    fn fig1_tree() -> RegionTree {
+        let mut t = RegionTree::new("fig1");
+        let r1 = t.add(RegionId(0), "cr1");
+        let r2 = t.add(RegionId(0), "cr2");
+        let _r3 = t.add(RegionId(0), "cr3");
+        let _r4 = t.add(r1, "cr4");
+        let _r5 = t.add(r2, "cr5");
+        let r6 = t.add(r1, "cr6");
+        let _r7 = t.add(r2, "cr7");
+        let _r8 = t.add(r6, "cr8");
+        t
+    }
+
+    #[test]
+    fn depths_follow_nesting() {
+        let t = fig1_tree();
+        assert_eq!(t.depth(RegionId(1)), 1);
+        assert_eq!(t.depth(RegionId(4)), 2);
+        assert_eq!(t.depth(RegionId(8)), 3);
+        assert_eq!(t.at_depth(1), vec![RegionId(1), RegionId(2), RegionId(3)]);
+    }
+
+    #[test]
+    fn subtree_preorder() {
+        let t = fig1_tree();
+        assert_eq!(
+            t.subtree(RegionId(1)),
+            vec![RegionId(1), RegionId(4), RegionId(6), RegionId(8)]
+        );
+    }
+
+    #[test]
+    fn path_and_ancestry() {
+        let t = fig1_tree();
+        assert_eq!(
+            t.path(RegionId(8)),
+            vec![RegionId(1), RegionId(6), RegionId(8)]
+        );
+        assert!(t.is_ancestor(RegionId(1), RegionId(8)));
+        assert!(!t.is_ancestor(RegionId(2), RegionId(8)));
+    }
+
+    #[test]
+    fn leaves() {
+        let t = fig1_tree();
+        assert!(t.is_leaf(RegionId(4)));
+        assert!(!t.is_leaf(RegionId(1)));
+    }
+
+    #[test]
+    fn validates() {
+        assert!(fig1_tree().validate().is_ok());
+    }
+
+    #[test]
+    fn render_mentions_all_regions() {
+        let t = fig1_tree();
+        let r = t.render();
+        for i in 1..=8 {
+            assert!(r.contains(&format!("code region {}", i)));
+        }
+    }
+
+    #[test]
+    fn len_excludes_root() {
+        assert_eq!(fig1_tree().len(), 8);
+    }
+
+    #[test]
+    fn from_nodes_allows_children_numbered_below_parents() {
+        // ST's Fig. 8: regions 11, 12 nested in region 14.
+        let nodes: Vec<(usize, usize, &str, bool)> = (1..=10)
+            .map(|i| (i, 0, "flat", false))
+            .chain([
+                (11, 14, "ramod3_kernel", false),
+                (12, 14, "ramod3_aux", false),
+                (13, 0, "write", false),
+                (14, 0, "ramod3_driver", false),
+            ])
+            .collect();
+        let t = RegionTree::from_nodes("st", &nodes).unwrap();
+        assert_eq!(t.len(), 14);
+        assert_eq!(t.parent(RegionId(11)), Some(RegionId(14)));
+        assert_eq!(t.depth(RegionId(11)), 2);
+        assert_eq!(t.depth(RegionId(14)), 1);
+        assert_eq!(t.children(RegionId(14)), &[RegionId(11), RegionId(12)]);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn from_nodes_rejects_bad_input() {
+        assert!(RegionTree::from_nodes("x", &[(2, 0, "a", false)]).is_err());
+        assert!(
+            RegionTree::from_nodes("x", &[(1, 0, "a", false), (1, 0, "b", false)])
+                .is_err()
+        );
+        // cycle: 1 -> 2 -> 1
+        assert!(
+            RegionTree::from_nodes("x", &[(1, 2, "a", false), (2, 1, "b", false)])
+                .is_err()
+        );
+    }
+}

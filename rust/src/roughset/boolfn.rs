@@ -1,0 +1,224 @@
+//! The discernibility function (Equation 4) and its analysis.
+//!
+//! f_Λ = ⋀ { ⋁ c_ij : c_ij ≠ ∅ } — a monotone CNF over the condition
+//! attributes. From it we compute:
+//!
+//! - `core_attrs`: the classical core = attributes occurring as
+//!   singleton clauses (they belong to every reduct);
+//! - `minimal_reducts`: all minimal hitting sets of the clause family —
+//!   the "same conjunctive terms" the paper's worked examples report
+//!   (Table 2 → {a1,a2} / {a1,a3}; ST's Table 4 → {a2,a3}).
+//!
+//! Attribute counts are tiny (the paper uses 5), so exact minimal
+//! hitting-set enumeration by subset size is cheap; absorption pruning
+//! (drop clauses that are supersets of others) keeps it tighter.
+
+use crate::roughset::discern::{AttrSet, DiscernMatrix};
+
+/// Absorption: remove clauses that are supersets of another clause
+/// (they are implied in a monotone CNF). Also dedups.
+pub fn absorb(clauses: &[AttrSet]) -> Vec<AttrSet> {
+    let mut sorted: Vec<AttrSet> = clauses.to_vec();
+    sorted.sort_by_key(|c| c.count_ones());
+    let mut kept: Vec<AttrSet> = Vec::new();
+    for &c in &sorted {
+        if c == 0 {
+            continue;
+        }
+        if !kept.iter().any(|&k| k & c == k) {
+            kept.push(c);
+        }
+    }
+    kept.sort_unstable();
+    kept
+}
+
+/// The classical core: attributes appearing as singleton clauses.
+/// These attributes discern at least one object pair single-handedly,
+/// so every reduct must contain them.
+pub fn core_attrs(matrix: &DiscernMatrix) -> AttrSet {
+    matrix
+        .clauses()
+        .iter()
+        .filter(|c| c.count_ones() == 1)
+        .fold(0u64, |acc, &c| acc | c)
+}
+
+/// True if `set` hits every clause.
+fn hits_all(set: AttrSet, clauses: &[AttrSet]) -> bool {
+    clauses.iter().all(|&c| c & set != 0)
+}
+
+/// Enumerate all *minimal* reducts (minimal attribute sets hitting
+/// every non-empty discernibility entry), smallest cardinality first.
+/// `num_attrs` bounds the search space (≤ 64; realistically ≤ 16).
+pub fn minimal_reducts(matrix: &DiscernMatrix, num_attrs: usize) -> Vec<AttrSet> {
+    let clauses = absorb(&matrix.clauses());
+    if clauses.is_empty() {
+        return vec![0];
+    }
+    assert!(num_attrs <= 24, "reduct enumeration capped at 24 attributes");
+    let core = core_attrs(matrix);
+    // Attributes that appear in some clause (others can never help).
+    let mut useful = 0u64;
+    for &c in &clauses {
+        useful |= c;
+    }
+    let optional: Vec<usize> = (0..num_attrs)
+        .filter(|&a| useful & (1 << a) != 0 && core & (1 << a) == 0)
+        .collect();
+
+    let mut found: Vec<AttrSet> = Vec::new();
+    // Enumerate candidate supersets of the core by increasing size.
+    for extra in 0..=optional.len() {
+        let mut combo = vec![0usize; extra];
+        enumerate_combinations(&optional, extra, &mut combo, 0, 0, &mut |chosen| {
+            let mut set = core;
+            for &a in chosen {
+                set |= 1 << a;
+            }
+            if hits_all(set, &clauses)
+                && !found.iter().any(|&f| f & set == f)
+            {
+                found.push(set);
+            }
+        });
+        // All supersets of found reducts are non-minimal; we keep
+        // scanning larger sizes only to find incomparable reducts.
+        if !found.is_empty() && extra >= optional.len() {
+            break;
+        }
+    }
+    found.sort_by_key(|s| (s.count_ones(), *s));
+    found
+}
+
+fn enumerate_combinations(
+    pool: &[usize],
+    k: usize,
+    combo: &mut Vec<usize>,
+    depth: usize,
+    start: usize,
+    visit: &mut impl FnMut(&[usize]),
+) {
+    if depth == k {
+        visit(&combo[..k]);
+        return;
+    }
+    for i in start..pool.len() {
+        combo[depth] = pool[i];
+        enumerate_combinations(pool, k, combo, depth + 1, i + 1, visit);
+    }
+}
+
+/// Pretty-print an attribute set using the table's names.
+pub fn set_to_names(set: AttrSet, names: &[String]) -> Vec<String> {
+    (0..names.len())
+        .filter(|a| set & (1 << a) != 0)
+        .map(|a| names[a].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roughset::table::DecisionTable;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn table2_matrix() -> DiscernMatrix {
+        DiscernMatrix::build(&DecisionTable::paper_table2())
+    }
+
+    #[test]
+    fn paper_example_reducts() {
+        // Equation 5: f = (a1) ∧ (a2 ∨ a3) ∧ (a1 ∨ a4) ∧ (a2 ∨ a3 ∨ a4)
+        // ⇒ minimal reducts {a1,a2} and {a1,a3}.
+        let m = table2_matrix();
+        let reducts = minimal_reducts(&m, 4);
+        assert_eq!(reducts, vec![0b0011, 0b0101]); // {a1,a2}, {a1,a3}
+    }
+
+    #[test]
+    fn paper_example_core() {
+        // a1 appears alone in c_02 ⇒ classical core = {a1}.
+        assert_eq!(core_attrs(&table2_matrix()), 0b0001);
+    }
+
+    #[test]
+    fn absorption() {
+        let clauses = [0b011, 0b001, 0b111, 0b110];
+        let kept = absorb(&clauses);
+        assert_eq!(kept, vec![0b001, 0b110]);
+    }
+
+    #[test]
+    fn empty_matrix_means_empty_reduct() {
+        // One decision class only — nothing to discern.
+        let mut t = DecisionTable::new(&["a1", "a2"]);
+        t.push("0", vec![0, 1], 0);
+        t.push("1", vec![1, 0], 0);
+        let m = DiscernMatrix::build(&t);
+        assert_eq!(minimal_reducts(&m, 2), vec![0]);
+        assert_eq!(core_attrs(&m), 0);
+    }
+
+    #[test]
+    fn reducts_hit_all_clauses_and_are_minimal() {
+        forall(
+            "reducts are minimal hitting sets",
+            |rng: &mut Rng| {
+                // Random decision table: 6 objects, 5 attrs, values 0..2,
+                // decisions 0..2.
+                let mut t = DecisionTable::new(&["a1", "a2", "a3", "a4", "a5"]);
+                for i in 0..6 {
+                    let row: Vec<u32> = (0..5).map(|_| rng.below(3) as u32).collect();
+                    t.push(&i.to_string(), row, rng.below(3) as u32);
+                }
+                t
+            },
+            |t| {
+                let m = DiscernMatrix::build(t);
+                let clauses = absorb(&m.clauses());
+                let reducts = minimal_reducts(&m, 5);
+                if clauses.is_empty() {
+                    return if reducts == vec![0] {
+                        Ok(())
+                    } else {
+                        Err("expected empty reduct".into())
+                    };
+                }
+                let core = core_attrs(&m);
+                for &r in &reducts {
+                    if !hits_all(r, &clauses) {
+                        return Err(format!("reduct {r:b} misses a clause"));
+                    }
+                    if core & r != core {
+                        return Err(format!("reduct {r:b} missing core {core:b}"));
+                    }
+                    // Minimality: removing any attribute breaks coverage.
+                    for a in 0..5 {
+                        if r & (1 << a) != 0 && hits_all(r & !(1 << a), &clauses) {
+                            return Err(format!("reduct {r:b} not minimal (drop a{})", a + 1));
+                        }
+                    }
+                }
+                // Pairwise incomparability.
+                for (x, &a) in reducts.iter().enumerate() {
+                    for &b in &reducts[x + 1..] {
+                        if a & b == a || a & b == b {
+                            return Err("comparable reducts".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn set_names() {
+        let names: Vec<String> = ["a1", "a2", "a3"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(set_to_names(0b101, &names), vec!["a1", "a3"]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Decision-relative discernibility matrix (Equation 3).
+//!
+//! Entry c_ij = { a ∈ A : a(x_i) ≠ a(x_j) } when d(x_i) ≠ d(x_j), else ∅.
+//! Attribute sets are u64 bitmasks (the paper uses 5 attributes; we
+//! support up to 64). Inconsistent tables — equal conditions, different
+//! decisions — yield an *empty* entry for that pair, which Equation 4
+//! simply skips (the paper's Table 4 contains exactly this case:
+//! regions 5 and 11).
+
+use crate::roughset::table::DecisionTable;
+use crate::util::tables::Table;
+
+/// Bitmask of attribute indices.
+pub type AttrSet = u64;
+
+#[derive(Debug, Clone)]
+pub struct DiscernMatrix {
+    n: usize,
+    /// Upper-triangle entries, row-major: entry(i, j) for i < j.
+    entries: Vec<AttrSet>,
+    attr_names: Vec<String>,
+}
+
+impl DiscernMatrix {
+    /// Build from a decision table.
+    pub fn build(t: &DecisionTable) -> DiscernMatrix {
+        assert!(t.num_attrs() <= 64, "at most 64 attributes supported");
+        let n = t.num_objects();
+        let mut entries = vec![0u64; n * (n.saturating_sub(1)) / 2];
+        let mut idx = 0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if t.decision(i) != t.decision(j) {
+                    let mut set = 0u64;
+                    for a in 0..t.num_attrs() {
+                        if t.row(i)[a] != t.row(j)[a] {
+                            set |= 1 << a;
+                        }
+                    }
+                    entries[idx] = set;
+                }
+                idx += 1;
+            }
+        }
+        DiscernMatrix {
+            n,
+            entries,
+            attr_names: t.attr_names().to_vec(),
+        }
+    }
+
+    pub fn num_objects(&self) -> usize {
+        self.n
+    }
+
+    /// Entry for the unordered pair {i, j}, i != j.
+    pub fn entry(&self, i: usize, j: usize) -> AttrSet {
+        let (i, j) = if i < j { (i, j) } else { (j, i) };
+        debug_assert!(j < self.n && i != j);
+        // Offset of row i in the packed upper triangle:
+        // sum_{k < i} (n - 1 - k) = i*(2n - i - 1)/2.
+        let row_start = i * (2 * self.n - i - 1) / 2;
+        self.entries[row_start + (j - i - 1)]
+    }
+
+    /// All non-empty entries (the CNF clauses of Equation 4).
+    pub fn clauses(&self) -> Vec<AttrSet> {
+        self.entries.iter().copied().filter(|&e| e != 0).collect()
+    }
+
+    /// True if some pair differs in decision but not in any condition
+    /// attribute (an inconsistent decision table).
+    pub fn has_inconsistency(&self, t: &DecisionTable) -> bool {
+        let n = self.n;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if t.decision(i) != t.decision(j) && self.entry(i, j) == 0 {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Render like the paper's Fig. 10: each cell lists the attributes
+    /// on which the pair differs (upper triangle).
+    pub fn render(&self, title: &str) -> String {
+        let mut header: Vec<String> = vec!["".to_string()];
+        for j in 0..self.n {
+            header.push(format!("{}", j));
+        }
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(title, &header_refs);
+        for i in 0..self.n {
+            let mut cells = vec![format!("{}", i)];
+            for j in 0..self.n {
+                if j <= i {
+                    cells.push("".to_string());
+                } else {
+                    cells.push(self.set_names(self.entry(i, j)));
+                }
+            }
+            table.row(&cells);
+        }
+        table.render()
+    }
+
+    pub fn set_names(&self, set: AttrSet) -> String {
+        if set == 0 {
+            return "φ".to_string();
+        }
+        let mut names = Vec::new();
+        for a in 0..self.attr_names.len() {
+            if set & (1 << a) != 0 {
+                names.push(self.attr_names[a].clone());
+            }
+        }
+        names.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table2_matrix() {
+        // Fig. 3 of the paper: c_02 = {a1}, c_03 = {a2,a3},
+        // c_12 = {a1,a4}, c_13 = {a2,a3,a4}; same-decision pairs empty.
+        let t = DecisionTable::paper_table2();
+        let m = DiscernMatrix::build(&t);
+        assert_eq!(m.entry(0, 2), 0b0001); // a1
+        assert_eq!(m.entry(0, 3), 0b0110); // a2, a3
+        assert_eq!(m.entry(1, 2), 0b1001); // a1, a4
+        assert_eq!(m.entry(1, 3), 0b1110); // a2, a3, a4
+        assert_eq!(m.entry(0, 1), 0); // same decision
+        assert_eq!(m.entry(2, 3), 0); // same decision
+        assert_eq!(m.clauses().len(), 4);
+    }
+
+    #[test]
+    fn entry_is_symmetric() {
+        let t = DecisionTable::paper_table2();
+        let m = DiscernMatrix::build(&t);
+        assert_eq!(m.entry(2, 0), m.entry(0, 2));
+        assert_eq!(m.entry(3, 1), m.entry(1, 3));
+    }
+
+    #[test]
+    fn inconsistency_detected() {
+        let mut t = DecisionTable::new(&["a1"]);
+        t.push("x", vec![1], 0);
+        t.push("y", vec![1], 1); // same condition, different decision
+        let m = DiscernMatrix::build(&t);
+        assert!(m.has_inconsistency(&t));
+        assert!(m.clauses().is_empty());
+    }
+
+    #[test]
+    fn render_shows_attr_names() {
+        let t = DecisionTable::paper_table2();
+        let m = DiscernMatrix::build(&t);
+        let r = m.render("Fig 3");
+        assert!(r.contains("a2,a3,a4"));
+        assert!(r.contains("φ"));
+    }
+
+    #[test]
+    fn larger_packed_indexing() {
+        // 5 objects, decisions all distinct => every pair non-empty.
+        let mut t = DecisionTable::new(&["a1"]);
+        for i in 0..5 {
+            t.push(&i.to_string(), vec![i as u32], i as u32);
+        }
+        let m = DiscernMatrix::build(&t);
+        for i in 0..5 {
+            for j in 0..5 {
+                if i != j {
+                    assert_eq!(m.entry(i, j), 1, "pair ({i},{j})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Rough set theory engine (paper §4.4.1).
+//!
+//! AutoAnalyzer uncovers bottleneck root causes by building a decision
+//! system Λ = (U, A ∪ {d}), computing its decision-relative
+//! discernibility matrix, forming the discernibility function (a CNF
+//! over the condition attributes), and extracting the attributes that
+//! dominate the decision:
+//!
+//! - the classical **core** (attributes appearing as singleton matrix
+//!   entries — present in every reduct), and
+//! - all **minimal reducts** (minimal attribute sets hitting every
+//!   non-empty matrix entry), which is what the paper's worked examples
+//!   actually report as "core attributions" ({a1,a2} or {a1,a3} for
+//!   Table 2; {a2,a3} for Table 4).
+
+pub mod table;
+pub mod discern;
+pub mod boolfn;
+
+pub use boolfn::{core_attrs, minimal_reducts};
+pub use discern::DiscernMatrix;
+pub use table::DecisionTable;

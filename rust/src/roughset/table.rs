@@ -1,0 +1,137 @@
+//! Decision tables: objects × (condition attributes, decision).
+
+use crate::util::tables::Table;
+
+/// A decision table with discrete attribute values (the paper's tables
+/// hold cluster ids / 0-1 severities — small unsigned ints).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecisionTable {
+    /// Attribute names a1..am (display only).
+    attrs: Vec<String>,
+    /// Object ids (process ranks or code-region ids).
+    ids: Vec<String>,
+    /// rows[i] = condition attribute values of object i.
+    rows: Vec<Vec<u32>>,
+    /// decisions[i] = decision attribute value of object i.
+    decisions: Vec<u32>,
+}
+
+impl DecisionTable {
+    pub fn new(attrs: &[&str]) -> DecisionTable {
+        DecisionTable {
+            attrs: attrs.iter().map(|s| s.to_string()).collect(),
+            ids: Vec::new(),
+            rows: Vec::new(),
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, id: &str, conditions: Vec<u32>, decision: u32) {
+        assert_eq!(
+            conditions.len(),
+            self.attrs.len(),
+            "row width != attribute count"
+        );
+        self.ids.push(id.to_string());
+        self.rows.push(conditions);
+        self.decisions.push(decision);
+    }
+
+    pub fn num_objects(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn num_attrs(&self) -> usize {
+        self.attrs.len()
+    }
+
+    pub fn attr_name(&self, a: usize) -> &str {
+        &self.attrs[a]
+    }
+
+    pub fn attr_names(&self) -> &[String] {
+        &self.attrs
+    }
+
+    pub fn id(&self, i: usize) -> &str {
+        &self.ids[i]
+    }
+
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.rows[i]
+    }
+
+    pub fn decision(&self, i: usize) -> u32 {
+        self.decisions[i]
+    }
+
+    /// Objects whose decision equals `d`.
+    pub fn objects_with_decision(&self, d: u32) -> Vec<usize> {
+        (0..self.num_objects())
+            .filter(|&i| self.decisions[i] == d)
+            .collect()
+    }
+
+    /// Render like the paper's Table 3 / Table 4.
+    pub fn render(&self, title: &str) -> String {
+        let mut header: Vec<&str> = vec!["ID"];
+        for a in &self.attrs {
+            header.push(a);
+        }
+        header.push("D");
+        let mut t = Table::new(title, &header);
+        for i in 0..self.num_objects() {
+            let mut cells = vec![self.ids[i].clone()];
+            for v in &self.rows[i] {
+                cells.push(v.to_string());
+            }
+            cells.push(self.decisions[i].to_string());
+            t.row(&cells);
+        }
+        t.render()
+    }
+
+    /// The Table 2 example from the paper (weather data) — used by
+    /// tests here and in `boolfn` to pin the worked example.
+    #[cfg(test)]
+    pub fn paper_table2() -> DecisionTable {
+        // a1: sunny=0, overcast=1 | a2: hot=0, cool=1
+        // a3: high=0, low=1       | a4: false=0, true=1
+        // decision: N=0, P=1
+        let mut t = DecisionTable::new(&["a1", "a2", "a3", "a4"]);
+        t.push("0", vec![0, 0, 0, 0], 0);
+        t.push("1", vec![0, 0, 0, 1], 0);
+        t.push("2", vec![1, 0, 0, 0], 1);
+        t.push("3", vec![0, 1, 1, 0], 1);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_shape() {
+        let t = DecisionTable::paper_table2();
+        assert_eq!(t.num_objects(), 4);
+        assert_eq!(t.num_attrs(), 4);
+        assert_eq!(t.decision(2), 1);
+        assert_eq!(t.objects_with_decision(0), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = DecisionTable::new(&["a1", "a2"]);
+        t.push("0", vec![1], 0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let t = DecisionTable::paper_table2();
+        let r = t.render("Table 2");
+        assert!(r.contains("Table 2"));
+        assert!(r.contains("| ID | a1 | a2 | a3 | a4 | D |"));
+    }
+}

@@ -1,0 +1,281 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles each once on the CPU PJRT client,
+//! and executes them from the analysis hot path.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` — because
+//! the crate's xla_extension 0.5.1 rejects the 64-bit instruction ids in
+//! jax>=0.5 serialized protos (see /opt/xla-example/README.md).
+//!
+//! Artifacts are shape-static, so inputs are padded up to the nearest
+//! manifest bucket (`manifest.json`) and outputs sliced back. Executables
+//! are compiled lazily and cached for the life of the runtime; the
+//! coordinator keeps one runtime per worker thread (the PJRT wrapper is a
+//! raw C handle, so we do not assert Send/Sync — see coordinator/).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+
+/// Severity bands used throughout the paper (k = 5).
+pub const SEVERITY_K: usize = 5;
+
+/// Result of the fixed-iteration k-means artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KmeansOut {
+    pub centroids: Vec<f32>,
+    pub assignments: Vec<u32>,
+    pub inertia: f32,
+}
+
+/// Execution counters, exported into the coordinator's metrics.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: AtomicU64,
+    pub executions: AtomicU64,
+    /// Padded elements shipped that carried no information (pad waste).
+    pub padded_elems: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.compiles.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.padded_elems.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct ManifestEntry {
+    file: String,
+}
+
+/// The PJRT-backed clustering runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// Sorted pairwise buckets (m, n) -> artifact file.
+    pairwise: Vec<((usize, usize), ManifestEntry)>,
+    /// Sorted kmeans buckets r -> artifact file.
+    kmeans: Vec<(usize, ManifestEntry)>,
+    pub kmeans_iters: usize,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RuntimeStats,
+}
+
+impl PjrtRuntime {
+    /// Load the artifact directory (must contain `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+
+        let kmeans_iters = manifest
+            .get("kmeans_iters")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing kmeans_iters"))?;
+        let severity_k = manifest
+            .get("severity_k")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing severity_k"))?;
+        if severity_k != SEVERITY_K {
+            bail!("manifest severity_k={} but crate expects {}", severity_k, SEVERITY_K);
+        }
+
+        let mut pairwise = Vec::new();
+        let mut kmeans = Vec::new();
+        for e in manifest
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing file"))?
+                .to_string();
+            match e.get("entry").and_then(Json::as_str) {
+                Some("pairwise") => {
+                    let m = e.get("m").and_then(Json::as_usize).unwrap_or(0);
+                    let n = e.get("n").and_then(Json::as_usize).unwrap_or(0);
+                    pairwise.push(((m, n), ManifestEntry { file }));
+                }
+                Some("kmeans") => {
+                    let r = e.get("r").and_then(Json::as_usize).unwrap_or(0);
+                    kmeans.push((r, ManifestEntry { file }));
+                }
+                other => bail!("unknown manifest entry kind {:?}", other),
+            }
+        }
+        if pairwise.is_empty() || kmeans.is_empty() {
+            bail!("manifest has no pairwise or no kmeans buckets");
+        }
+        pairwise.sort_by_key(|(k, _)| *k);
+        kmeans.sort_by_key(|(k, _)| *k);
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            dir,
+            pairwise,
+            kmeans,
+            kmeans_iters,
+            cache: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Largest pairwise bucket (callers chunk above this).
+    pub fn max_pairwise_bucket(&self) -> (usize, usize) {
+        *self.pairwise.iter().map(|(k, _)| k).max().unwrap()
+    }
+
+    pub fn max_kmeans_bucket(&self) -> usize {
+        self.kmeans.iter().map(|(k, _)| *k).max().unwrap()
+    }
+
+    fn executable(
+        &self,
+        file: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", file))?;
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn pick_pairwise(&self, m: usize, n: usize) -> Result<(usize, usize, &ManifestEntry)> {
+        // Smallest bucket that fits both dims. Buckets are sorted by (m, n)
+        // so the first fit is also minimal in m, then n.
+        for ((bm, bn), e) in &self.pairwise {
+            if *bm >= m && *bn >= n {
+                return Ok((*bm, *bn, e));
+            }
+        }
+        bail!(
+            "no pairwise bucket fits {}x{} (max {:?}); re-run `make artifacts` with larger buckets",
+            m,
+            n,
+            self.max_pairwise_bucket()
+        )
+    }
+
+    fn pick_kmeans(&self, r: usize) -> Result<(usize, &ManifestEntry)> {
+        for (br, e) in &self.kmeans {
+            if *br >= r {
+                return Ok((*br, e));
+            }
+        }
+        bail!(
+            "no kmeans bucket fits r={} (max {}); re-run `make artifacts`",
+            r,
+            self.max_kmeans_bucket()
+        )
+    }
+
+    /// Euclidean distance matrix over the rows of `x` (one row per
+    /// process), computed by the Pallas pairwise artifact.
+    pub fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        let (m, n) = (x.rows(), x.cols());
+        if m == 0 {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let (bm, bn, entry) = self.pick_pairwise(m, n)?;
+        let exe = self.executable(&entry.file)?;
+
+        let padded = x.pad_to(bm, bn);
+        let mut mask = vec![0.0f32; bm];
+        mask[..m].fill(1.0);
+        self.stats
+            .padded_elems
+            .fetch_add((bm * bn - m * n) as u64, Ordering::Relaxed);
+
+        let x_lit = xla::Literal::vec1(padded.data())
+            .reshape(&[bm as i64, bn as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let mask_lit = xla::Literal::vec1(&mask);
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, mask_lit])
+            .map_err(|e| anyhow!("executing pairwise: {e:?}"))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching pairwise result: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals: Vec<f32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(Matrix::from_vec(bm, bm, vals).slice_to(m, m))
+    }
+
+    /// Fixed-iteration 1-D k-means into the five severity bands.
+    ///
+    /// `init` must have exactly `SEVERITY_K` centroids; use
+    /// `crate::cluster::kmeans::linspace_init` so the native and PJRT
+    /// backends agree bit-for-bit on the starting point.
+    pub fn kmeans5(&self, points: &[f32], init: &[f32]) -> Result<KmeansOut> {
+        if init.len() != SEVERITY_K {
+            bail!("kmeans5 needs {} init centroids, got {}", SEVERITY_K, init.len());
+        }
+        let r = points.len();
+        let (br, entry) = self.pick_kmeans(r)?;
+        let exe = self.executable(&entry.file)?;
+
+        let mut pts = vec![0.0f32; br];
+        pts[..r].copy_from_slice(points);
+        let mut mask = vec![0.0f32; br];
+        mask[..r].fill(1.0);
+        self.stats
+            .padded_elems
+            .fetch_add((br - r) as u64, Ordering::Relaxed);
+
+        let pts_lit = xla::Literal::vec1(&pts);
+        let mask_lit = xla::Literal::vec1(&mask);
+        let cent_lit = xla::Literal::vec1(init);
+        let result = exe
+            .execute::<xla::Literal>(&[pts_lit, mask_lit, cent_lit])
+            .map_err(|e| anyhow!("executing kmeans: {e:?}"))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching kmeans result: {e:?}"))?;
+        let (cent, assign, inertia) = lit
+            .to_tuple3()
+            .map_err(|e| anyhow!("untuple3: {e:?}"))?;
+        let centroids: Vec<f32> = cent.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let assignments_i32: Vec<i32> = assign.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let inertia: f32 = inertia
+            .get_first_element()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok(KmeansOut {
+            centroids,
+            assignments: assignments_i32[..r].iter().map(|&a| a as u32).collect(),
+            inertia,
+        })
+    }
+}

@@ -1,0 +1,3 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+pub mod client;
+pub use client::*;

@@ -1,0 +1,199 @@
+//! Disparity bottleneck search (paper §4.2.2 + §4.3).
+//!
+//! Average each region's CRNM (Equation 2) over all processes, k-means
+//! the values into the five severity bands, and call regions of
+//! severity high/very-high critical (CCRs). Refinement to CCCRs: a leaf
+//! CCR is a CCCR; a non-leaf CCR whose severity exceeds every child's
+//! is a CCCR.
+
+use anyhow::Result;
+
+use crate::cluster::kmeans::Severity;
+use crate::cluster::{ClusterBackend, KmeansResult};
+use crate::metrics::{region_means, MetricView};
+use crate::regions::RegionId;
+use crate::trace::Trace;
+
+#[derive(Debug, Clone)]
+pub struct DisparityResult {
+    /// Mean metric value per region (index = region id - 1).
+    pub means: Vec<f64>,
+    pub kmeans: KmeansResult,
+    pub ccrs: Vec<RegionId>,
+    pub cccrs: Vec<RegionId>,
+    /// Which metric the analysis ranked regions by.
+    pub metric: &'static str,
+}
+
+impl DisparityResult {
+    pub fn exists(&self) -> bool {
+        !self.ccrs.is_empty()
+    }
+
+    pub fn severity(&self, region: RegionId) -> Severity {
+        self.kmeans.severities[region.0 - 1]
+    }
+
+    /// Render like the paper's Fig. 12.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for band in (0..5).rev() {
+            let sev = Severity::from_rank(band);
+            let members: Vec<String> = self
+                .kmeans
+                .severities
+                .iter()
+                .enumerate()
+                .filter(|(_, &s)| s == sev)
+                .map(|(i, _)| (i + 1).to_string())
+                .collect();
+            if !members.is_empty() {
+                out.push_str(&format!("{}: code regions: {}\n", sev.name(), members.join(",")));
+            }
+        }
+        let cccrs: Vec<String> = self.cccrs.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!("CCCR: {{{}}}\n", cccrs.join(", ")));
+        out
+    }
+}
+
+/// Run the disparity analysis with a chosen metric view (CRNM for the
+/// paper's main results; CPI / wall clock for the §6.4 metric study).
+pub fn disparity_search(
+    trace: &Trace,
+    backend: &dyn ClusterBackend,
+    view: MetricView,
+) -> Result<DisparityResult> {
+    let means = region_means(trace, view);
+    let points: Vec<f32> = means.iter().map(|&m| m as f32).collect();
+    let kmeans = backend.severity_kmeans(&points)?;
+
+    let ccrs: Vec<RegionId> = trace
+        .tree
+        .region_ids()
+        .filter(|r| kmeans.severities[r.0 - 1].is_critical())
+        .collect();
+
+    let mut cccrs = Vec::new();
+    for &ccr in &ccrs {
+        if trace.tree.is_leaf(ccr) {
+            cccrs.push(ccr);
+        } else {
+            let sev = kmeans.severities[ccr.0 - 1];
+            let dominates = trace
+                .tree
+                .children(ccr)
+                .iter()
+                .all(|c| kmeans.severities[c.0 - 1] < sev);
+            if dominates {
+                cccrs.push(ccr);
+            }
+        }
+    }
+
+    Ok(DisparityResult {
+        means,
+        kmeans,
+        ccrs,
+        cccrs,
+        metric: view.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::regions::RegionTree;
+
+    /// Tree: 1..4 flat; 5 parent of 6; CRNM-like values make 5 & 6
+    /// dominant with 6 the hotter child.
+    fn trace_with_values(vals: &[(usize, f64)]) -> Trace {
+        let mut tree = RegionTree::new("d");
+        tree.add(RegionId(0), "r1");
+        tree.add(RegionId(0), "r2");
+        tree.add(RegionId(0), "r3");
+        tree.add(RegionId(0), "r4");
+        let p = tree.add(RegionId(0), "r5");
+        tree.add(p, "r6");
+        let mut t = Trace::new(tree, 2);
+        for proc in 0..2 {
+            t.sample_mut(proc, RegionId(0)).wall = 100.0;
+            for &(r, v) in vals {
+                let s = t.sample_mut(proc, RegionId(r));
+                // Arrange wall & instructions so crnm == v:
+                // crnm = (wall/100) * (cycles/instr); set cycles=instr
+                // (cpi=1) and wall = v*100.
+                s.wall = v * 100.0;
+                s.cycles = 1e9;
+                s.instructions = 1e9;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn dominant_regions_flagged() {
+        let t = trace_with_values(&[
+            (1, 0.01),
+            (2, 0.015),
+            (3, 0.02),
+            (4, 0.05),
+            (5, 0.45),
+            (6, 0.42),
+        ]);
+        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        assert!(r.exists());
+        assert!(r.ccrs.contains(&RegionId(5)));
+        assert!(r.ccrs.contains(&RegionId(6)));
+        // 6 is a leaf CCR => CCCR. 5's child 6 has equal-ish severity,
+        // so 5 is NOT a CCCR unless it dominates.
+        assert!(r.cccrs.contains(&RegionId(6)));
+    }
+
+    #[test]
+    fn parent_dominating_children_is_cccr() {
+        // Parent 5 very high, child 6 low: 5 is the CCCR.
+        let t = trace_with_values(&[
+            (1, 0.01),
+            (2, 0.012),
+            (3, 0.02),
+            (4, 0.03),
+            (5, 0.5),
+            (6, 0.04),
+        ]);
+        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        assert!(r.ccrs.contains(&RegionId(5)));
+        assert!(r.cccrs.contains(&RegionId(5)));
+    }
+
+    #[test]
+    fn uniform_regions_not_flagged() {
+        let t = trace_with_values(&[
+            (1, 0.1),
+            (2, 0.1),
+            (3, 0.1),
+            (4, 0.1),
+            (5, 0.1),
+            (6, 0.1),
+        ]);
+        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        assert!(!r.exists(), "{:?}", r.kmeans.severities);
+    }
+
+    #[test]
+    fn render_lists_bands() {
+        let t = trace_with_values(&[
+            (1, 0.01),
+            (2, 0.015),
+            (3, 0.02),
+            (4, 0.05),
+            (5, 0.45),
+            (6, 0.42),
+        ]);
+        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        let text = r.render();
+        assert!(text.contains("very high: code regions:"));
+        assert!(text.contains("CCCR:"));
+    }
+}

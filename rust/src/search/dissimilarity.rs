@@ -1,0 +1,409 @@
+//! Algorithm 2: locating dissimilarity bottlenecks.
+//!
+//! Baseline: cluster the per-process vectors over the 1-code regions
+//! (deeper regions zeroed — their data is already aggregated into their
+//! depth-1 ancestors). Then, for each 1-code region j: zero its column
+//! and recluster — if the clustering changes, j is a CCR and its
+//! subtree is analysed: restoring a child k's column (with the rest of
+//! j still zeroed) and getting the *baseline* clustering back means k
+//! alone carries j's effect, so k is a CCR too. A CCR that is a leaf,
+//! or none of whose children are CCRs, is a CCCR — the spot the user
+//! should optimize. If no single region explains the difference, the
+//! fallback combines s ≥ 2 *adjacent* 1-code regions into composite
+//! regions and repeats.
+//!
+//! Every recluster call goes through the `ClusterBackend`, so on the
+//! PJRT backend this loop is what drives the Pallas pairwise-distance
+//! artifact (the hot path the coordinator batches).
+
+use anyhow::Result;
+
+use crate::cluster::optics::Clustering;
+use crate::cluster::ClusterBackend;
+use crate::metrics::{perf_matrix, MetricView};
+use crate::regions::RegionId;
+use crate::trace::Trace;
+use crate::util::matrix::Matrix;
+
+/// Outcome of the dissimilarity analysis.
+#[derive(Debug, Clone)]
+pub struct DissimilarityResult {
+    /// Clustering of the full performance vectors (§4.2.1 existence
+    /// test — Fig. 9's "there are 5 clusters").
+    pub clustering: Clustering,
+    /// Baseline clustering over 1-code regions only (Algorithm 2).
+    pub baseline: Clustering,
+    pub ccrs: Vec<RegionId>,
+    pub cccrs: Vec<RegionId>,
+    /// Composite size s that located the bottleneck, if the fallback
+    /// was needed.
+    pub composite_size: Option<usize>,
+    /// Composite member groups found by the fallback (each a run of
+    /// adjacent 1-code regions).
+    pub composites: Vec<Vec<RegionId>>,
+    /// Number of clustering invocations (perf accounting).
+    pub reclusters: usize,
+}
+
+impl DissimilarityResult {
+    pub fn exists(&self) -> bool {
+        !self.clustering.is_uniform()
+    }
+
+    /// Render in the paper's Fig. 9 style.
+    pub fn render(&self) -> String {
+        let mut out = String::from("Performance similarity\n");
+        out.push_str(&self.clustering.render());
+        out.push_str(&format!(
+            "dissimilarity severity, {}: {:.6}\n",
+            self.clustering.num_clusters(),
+            self.clustering.severity()
+        ));
+        if !self.exists() {
+            out.push_str("no dissimilarity bottlenecks\n");
+            return out;
+        }
+        let cccrs: Vec<String> = self.cccrs.iter().map(|r| format!("code region {r}")).collect();
+        out.push_str(&format!("CCCR: {}\n", cccrs.join(", ")));
+        let ccrs: Vec<String> = self.ccrs.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!("CCR set: {{{}}}\n", ccrs.join(", ")));
+        if let Some(s) = self.composite_size {
+            out.push_str(&format!("(located via composite regions, s = {s})\n"));
+        }
+        out
+    }
+}
+
+struct Searcher<'a> {
+    trace: &'a Trace,
+    /// Working matrix (columns r-1 for region id r).
+    work: Matrix,
+    backup: Matrix,
+    baseline: Clustering,
+    reclusters: usize,
+    /// Incremental state (EXPERIMENTS.md §Perf change 2): squared
+    /// pairwise distances and squared row norms, patched per column
+    /// change — O(m²) per probe instead of the O(m²·n) full recompute
+    /// the backend would do. The *initial* matrix still comes from the
+    /// backend (PJRT exercises the Pallas artifact), after which probes
+    /// are numerically pure column updates.
+    sq: Vec<f64>,
+    norms_sq: Vec<f64>,
+}
+
+impl<'a> Searcher<'a> {
+    fn col(&self, region: RegionId) -> usize {
+        region.0 - 1
+    }
+
+    /// Patch the incremental state for column `c` changing from the
+    /// current working values to `new` per row.
+    fn set_col(&mut self, c: usize, new: impl Fn(usize) -> f32) {
+        let m = self.work.rows();
+        for i in 0..m {
+            let old_i = self.work[(i, c)] as f64;
+            let new_i = new(i) as f64;
+            if old_i == new_i {
+                continue;
+            }
+            self.norms_sq[i] += new_i * new_i - old_i * old_i;
+            for j in 0..m {
+                if j == i {
+                    continue;
+                }
+                // The pair delta must use j's *current* value; rows are
+                // updated one at a time, so rows < i already hold the
+                // new value and rows > i the old one — reading from
+                // `work` (updated as we go) keeps this consistent.
+                let other = self.work[(j, c)] as f64;
+                let d_old = old_i - other;
+                let d_new = new_i - other;
+                let delta = d_new * d_new - d_old * d_old;
+                self.sq[i * m + j] += delta;
+                self.sq[j * m + i] += delta;
+            }
+            self.work[(i, c)] = new_i as f32;
+        }
+    }
+
+    fn zero_col(&mut self, region: RegionId) {
+        let c = self.col(region);
+        self.set_col(c, |_| 0.0);
+    }
+
+    fn restore_col(&mut self, region: RegionId) {
+        let c = self.col(region);
+        // Borrow-friendly copy of the backup column.
+        let col: Vec<f32> = (0..self.backup.rows())
+            .map(|p| self.backup[(p, c)])
+            .collect();
+        self.set_col(c, move |p| col[p]);
+    }
+
+    /// Rebuild the incremental state from the working matrix (used at
+    /// construction and available to tests as the oracle).
+    fn rebuild(&mut self) {
+        let m = self.work.rows();
+        self.norms_sq = (0..m)
+            .map(|p| {
+                self.work
+                    .row(p)
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum()
+            })
+            .collect();
+        self.sq = vec![0.0; m * m];
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let mut acc = 0.0f64;
+                for c in 0..self.work.cols() {
+                    let d = (self.work[(i, c)] - self.work[(j, c)]) as f64;
+                    acc += d * d;
+                }
+                self.sq[i * m + j] = acc;
+                self.sq[j * m + i] = acc;
+            }
+        }
+    }
+
+    fn recluster(&mut self) -> Result<Clustering> {
+        self.reclusters += 1;
+        let m = self.work.rows();
+        let mut d = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                d[(i, j)] = self.sq[i * m + j].max(0.0).sqrt() as f32;
+            }
+        }
+        let norms: Vec<f32> = self.norms_sq.iter().map(|&n| n.max(0.0).sqrt() as f32).collect();
+        Ok(crate::cluster::optics::simplified_optics_from_parts(
+            &norms, &d, 1,
+        ))
+    }
+
+    /// Analyse children of a confirmed CCR `j` (lines 17-26): restore
+    /// each child's column in turn; if the baseline clustering
+    /// reappears, the child is a CCR. Recurses depth-first. Returns the
+    /// ids of children found to be CCRs.
+    fn analyze_children(
+        &mut self,
+        j: RegionId,
+        ccrs: &mut Vec<RegionId>,
+        cccrs: &mut Vec<RegionId>,
+    ) -> Result<bool> {
+        let children: Vec<RegionId> = self.trace.tree.children(j).to_vec();
+        let mut any_child_ccr = false;
+        for k in children {
+            self.restore_col(k);
+            let c = self.recluster()?;
+            let is_ccr = c == self.baseline;
+            self.zero_col(k);
+            if is_ccr {
+                ccrs.push(k);
+                any_child_ccr = true;
+                let sub_ccr = self.analyze_children(k, ccrs, cccrs)?;
+                if self.trace.tree.is_leaf(k) || !sub_ccr {
+                    cccrs.push(k);
+                }
+            }
+        }
+        Ok(any_child_ccr)
+    }
+}
+
+/// Run the §4.2.1 existence test + Algorithm 2.
+pub fn dissimilarity_search(
+    trace: &Trace,
+    backend: &dyn ClusterBackend,
+    view: MetricView,
+) -> Result<DissimilarityResult> {
+    let full = perf_matrix(trace, view);
+    let clustering = backend.simplified_optics(&full)?;
+    let mut reclusters = 1usize;
+
+    // Build the Algorithm 2 working matrix: deep regions zeroed.
+    let mut work = full.clone();
+    let deep: Vec<RegionId> = trace
+        .tree
+        .region_ids()
+        .filter(|&r| trace.tree.depth(r) > 1)
+        .collect();
+    for r in &deep {
+        for p in 0..work.rows() {
+            work[(p, r.0 - 1)] = 0.0;
+        }
+    }
+    let baseline = backend.simplified_optics(&work)?;
+    reclusters += 1;
+
+    let mut s = Searcher {
+        trace,
+        work,
+        backup: full,
+        baseline,
+        reclusters,
+        sq: Vec::new(),
+        norms_sq: Vec::new(),
+    };
+    s.rebuild();
+
+    let mut ccrs: Vec<RegionId> = Vec::new();
+    let mut cccrs: Vec<RegionId> = Vec::new();
+    let depth1 = trace.tree.at_depth(1);
+
+    if !clustering.is_uniform() {
+        for &j in &depth1 {
+            s.zero_col(j);
+            let changed = s.recluster()? != s.baseline;
+            if changed {
+                ccrs.push(j);
+                let any_child = s.analyze_children(j, &mut ccrs, &mut cccrs)?;
+                if trace.tree.is_leaf(j) || !any_child {
+                    cccrs.push(j);
+                }
+            }
+            s.restore_col(j);
+            // Re-zero descendants (restore_col only touches j itself,
+            // but analyze_children left them zeroed already).
+        }
+    }
+
+    // Fallback: composite regions of s adjacent 1-code regions.
+    let mut composite_size = None;
+    let mut composites: Vec<Vec<RegionId>> = Vec::new();
+    if !clustering.is_uniform() && ccrs.is_empty() && depth1.len() >= 2 {
+        'outer: for cs in 2..depth1.len() {
+            for window in depth1.windows(cs) {
+                for &r in window {
+                    s.zero_col(r);
+                }
+                let changed = s.recluster()? != s.baseline;
+                for &r in window {
+                    s.restore_col(r);
+                }
+                if changed {
+                    for &r in window {
+                        ccrs.push(r);
+                    }
+                    composites.push(window.to_vec());
+                    composite_size = Some(cs);
+                }
+            }
+            if composite_size.is_some() {
+                break 'outer;
+            }
+        }
+    }
+
+    ccrs.sort_unstable();
+    ccrs.dedup();
+    cccrs.sort_unstable();
+    cccrs.dedup();
+    Ok(DissimilarityResult {
+        clustering,
+        baseline: s.baseline,
+        ccrs,
+        cccrs,
+        composite_size,
+        composites,
+        reclusters: s.reclusters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::metrics::Metric;
+    use crate::regions::RegionTree;
+
+    /// Trace with an imbalance concentrated in one nested region:
+    /// region tree: 1 (flat), 2 (parent of 3), 3 (skewed leaf).
+    fn skewed_trace() -> Trace {
+        let mut tree = RegionTree::new("skew");
+        tree.add(RegionId(0), "flat"); // 1
+        let p = tree.add(RegionId(0), "parent"); // 2
+        tree.add(p, "hot"); // 3
+        let mut t = Trace::new(tree, 4);
+        for proc in 0..4 {
+            let hot = match proc {
+                0 | 1 => 100.0,
+                _ => 300.0 + proc as f64, // procs 2,3 differ
+            };
+            t.sample_mut(proc, RegionId(0)).wall = 500.0;
+            t.sample_mut(proc, RegionId(1)).cpu = 50.0;
+            t.sample_mut(proc, RegionId(3)).cpu = hot;
+            t.sample_mut(proc, RegionId(2)).cpu = hot + 10.0; // parent agg
+        }
+        t
+    }
+
+    #[test]
+    fn locates_nested_bottleneck() {
+        let t = skewed_trace();
+        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
+            .unwrap();
+        assert!(r.exists());
+        assert!(r.ccrs.contains(&RegionId(2)), "parent flagged: {:?}", r.ccrs);
+        assert!(r.ccrs.contains(&RegionId(3)), "child flagged: {:?}", r.ccrs);
+        assert_eq!(r.cccrs, vec![RegionId(3)], "leaf child is the CCCR");
+        assert!(r.composite_size.is_none());
+    }
+
+    #[test]
+    fn balanced_trace_no_bottleneck() {
+        let mut tree = RegionTree::new("flat");
+        tree.add(RegionId(0), "a");
+        tree.add(RegionId(0), "b");
+        let mut t = Trace::new(tree, 4);
+        for p in 0..4 {
+            t.sample_mut(p, RegionId(1)).cpu = 100.0;
+            t.sample_mut(p, RegionId(2)).cpu = 50.0;
+        }
+        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
+            .unwrap();
+        assert!(!r.exists());
+        assert!(r.ccrs.is_empty());
+        assert!(r.cccrs.is_empty());
+    }
+
+    #[test]
+    fn composite_fallback_finds_spread_imbalance() {
+        // Imbalance split across two adjacent small regions such that
+        // neither alone changes the clustering, but together they do.
+        let mut tree = RegionTree::new("spread");
+        for name in ["a", "b", "c", "d"] {
+            tree.add(RegionId(0), name);
+        }
+        let mut t = Trace::new(tree, 4);
+        for p in 0..4 {
+            let extra = if p < 2 { 0.0 } else { 60.0 };
+            t.sample_mut(p, RegionId(1)).cpu = 1000.0;
+            t.sample_mut(p, RegionId(2)).cpu = 100.0 + extra;
+            t.sample_mut(p, RegionId(3)).cpu = 100.0 + extra;
+            t.sample_mut(p, RegionId(4)).cpu = 1000.0;
+        }
+        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
+            .unwrap();
+        if r.exists() {
+            // Either single-region search or the composite fallback must
+            // locate something covering regions 2 and 3.
+            let covered: Vec<RegionId> = r.ccrs.clone();
+            assert!(
+                covered.contains(&RegionId(2)) || covered.contains(&RegionId(3)),
+                "ccrs {covered:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn render_mentions_cccr() {
+        let t = skewed_trace();
+        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
+            .unwrap();
+        let text = r.render();
+        assert!(text.contains("clusters of processes"));
+        assert!(text.contains("CCCR: code region 3"));
+    }
+}

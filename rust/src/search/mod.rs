@@ -1,0 +1,14 @@
+//! Bottleneck searching (paper §4.3).
+//!
+//! - `dissimilarity`: Algorithm 2 — top-down zero-out/restore search
+//!   over the code-region tree, locating the regions whose data drives
+//!   the process clustering apart; includes the composite-region
+//!   fallback (lines 31-37).
+//! - `disparity`: the severity-based refinement — leaf CCRs and
+//!   non-leaf CCRs dominating all their children become CCCRs.
+
+pub mod disparity;
+pub mod dissimilarity;
+
+pub use disparity::{disparity_search, DisparityResult};
+pub use dissimilarity::{dissimilarity_search, DissimilarityResult};

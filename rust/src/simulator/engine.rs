@@ -1,0 +1,372 @@
+//! The execution engine: WorkloadSpec → Trace.
+//!
+//! Model: every process executes the depth-1 regions in id order; a
+//! leaf region's costs come from its `Work` (instructions → cycles via
+//! the cache model; disk/net bytes → seconds via the machine model); a
+//! parent region's sample is the sum of its children plus its own work.
+//! Regions with `sync_end` are barriers: all executing processes leave
+//! together, and the wait (max arrival − own arrival) is charged to
+//! that region's wall clock and MPI time — this is what separates the
+//! wall clock from the CPU clock, exactly the distinction §4.2.1 builds
+//! the dissimilarity analysis on. The program root gets the sums plus
+//! the final implicit barrier (MPI_Finalize).
+
+use crate::metrics::RegionSample;
+use crate::regions::{RegionId, RegionTree};
+use crate::simulator::cache;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+use crate::workloads::spec::{Scope, WorkloadSpec};
+
+/// Simulate one run. Deterministic for a given (spec, seed).
+pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
+    let nodes: Vec<(usize, usize, &str, bool)> = spec
+        .regions
+        .iter()
+        .map(|r| (r.id, r.parent, r.name.as_str(), r.management))
+        .collect();
+    let tree = RegionTree::from_nodes(&spec.name, &nodes)
+        .expect("workload spec region ids must form a valid tree");
+
+    let mut trace = Trace::new(tree, spec.nprocs);
+    trace.master_rank = spec.master_rank;
+    for (k, v) in &spec.meta {
+        trace.set_meta(k, v);
+    }
+    trace.set_meta("machine", &spec.machine.name);
+    trace.set_meta("seed", &seed.to_string());
+
+    let shares = spec.dispatch.unit_shares(spec.nprocs, spec.total_units);
+    let dyn_overhead = spec.dispatch.overhead_s();
+    let mut root_rng = Rng::new(seed);
+
+    // Pass 1: leaf costs per process (parents accumulate afterwards).
+    let mut region_ids: Vec<usize> = spec.regions.iter().map(|r| r.id).collect();
+    region_ids.sort_unstable();
+    for p in 0..spec.nprocs {
+        let mut rng = root_rng.fork(p as u64 + 1);
+        for &id in &region_ids {
+            let region = spec.by_id(id).unwrap();
+            if !spec.is_leaf(id) {
+                continue;
+            }
+            let executes = match region.scope {
+                Scope::All => true,
+                Scope::MasterOnly => Some(p) == spec.master_rank,
+                Scope::WorkersOnly => Some(p) != spec.master_rank,
+            };
+            if !executes {
+                continue;
+            }
+            let w = &region.work;
+            // Effective work units for this (rank, region).
+            let units = if w.scales_with_units {
+                if region.scope == Scope::MasterOnly {
+                    spec.total_units // master touches every unit
+                } else {
+                    shares[p]
+                }
+            } else {
+                1.0
+            };
+            let skew = w
+                .rank_skew
+                .as_ref()
+                .map(|s| {
+                    assert_eq!(s.len(), spec.nprocs, "rank_skew length");
+                    s[p]
+                })
+                .unwrap_or(1.0);
+            let jitter = rng.jitter(spec.noise);
+            let instr = (w.instr_per_unit * units * skew + w.fixed_instr) * jitter;
+
+            let (l1_rate, l2_rate, stall_cpi, refs) = match &w.mem {
+                Some(prof) => {
+                    let o = cache::outcome(prof, &spec.machine);
+                    (o.l1_miss_rate, o.l2_miss_rate, o.stall_cpi, prof.refs_per_instr)
+                }
+                None => (0.004, 0.004, 0.0, 0.05),
+            };
+            let cycles = instr * (w.base_cpi + stall_cpi);
+            let cpu = cycles / spec.machine.freq_hz;
+
+            let disk_bytes = w.disk_bytes_per_unit * units;
+            let disk_time = spec
+                .machine
+                .disk_time(disk_bytes, w.disk_ops_per_unit * units);
+
+            // Dynamic dispatch adds coordination chatter to regions that
+            // actually move the units (management or messaging regions).
+            let coord_msgs = if dyn_overhead > 0.0
+                && (region.management || w.net_msgs_per_unit > 0.0)
+            {
+                units
+            } else {
+                0.0
+            };
+            let net_bytes = w.net_bytes_per_unit * units;
+            let net_time = spec
+                .machine
+                .net_time(net_bytes, w.net_msgs_per_unit * units)
+                + coord_msgs * dyn_overhead;
+
+            let s = trace.sample_mut(p, RegionId(id));
+            s.instructions = instr;
+            s.cycles = cycles;
+            s.cpu = cpu;
+            s.l1_access = instr * refs;
+            s.l1_miss = s.l1_access * l1_rate;
+            s.l2_access = s.l1_miss;
+            s.l2_miss = s.l2_access * l2_rate;
+            s.disk_bytes = disk_bytes;
+            s.mpi_bytes = net_bytes;
+            s.mpi_time = net_time;
+            s.wall = cpu + disk_time + net_time;
+        }
+    }
+
+    // Pass 2: aggregate children into parents, deepest first.
+    let max_depth = region_ids
+        .iter()
+        .map(|&id| trace.tree.depth(RegionId(id)))
+        .max()
+        .unwrap_or(0);
+    for depth in (1..=max_depth).rev() {
+        for &id in &region_ids {
+            if trace.tree.depth(RegionId(id)) != depth {
+                continue;
+            }
+            let parent = spec.by_id(id).unwrap().parent;
+            if parent == 0 {
+                continue;
+            }
+            for p in 0..spec.nprocs {
+                let child = *trace.sample(p, RegionId(id));
+                trace.sample_mut(p, RegionId(parent)).add(&child);
+            }
+        }
+    }
+
+    // Pass 3: barrier waits. The depth-1 sequence (in program order)
+    // repeats `phases` times, each phase running 1/phases of every
+    // region's work; a region whose sync cadence fires in this phase
+    // aligns all executing processes to the slowest, and the wait is
+    // charged to that region's wall clock + MPI time. This is how
+    // imbalance created in one region (ST's ramod3) surfaces as waits
+    // in the gather/smooth regions downstream — CPU clocks stay
+    // untouched, which is exactly why §4.2.1 clusters on CPU time.
+    let depth1 = spec.depth1_order();
+    let phases = spec.phases.max(1);
+    // Snapshot the sync-free walls: waits are accumulated separately so
+    // later phases don't re-count earlier phases' waits.
+    let base_wall: Vec<Vec<f64>> = (0..spec.nprocs)
+        .map(|p| {
+            depth1
+                .iter()
+                .map(|&id| trace.sample(p, RegionId(id)).wall)
+                .collect()
+        })
+        .collect();
+    let mut clock = vec![0.0f64; spec.nprocs];
+    for phase in 0..phases {
+        for (slot, &id) in depth1.iter().enumerate() {
+            let region = spec.by_id(id).unwrap();
+            let execs: Vec<usize> = (0..spec.nprocs)
+                .filter(|&p| match region.scope {
+                    Scope::All => true,
+                    Scope::MasterOnly => Some(p) == spec.master_rank,
+                    Scope::WorkersOnly => Some(p) != spec.master_rank,
+                })
+                .collect();
+            for &p in &execs {
+                clock[p] += base_wall[p][slot] / phases as f64;
+            }
+            let (modulus, offset) = region.sync_cadence;
+            if region.sync_end && phase % modulus == offset {
+                let latest = execs
+                    .iter()
+                    .map(|&p| clock[p])
+                    .fold(0.0f64, f64::max);
+                for &p in &execs {
+                    let wait = latest - clock[p];
+                    if wait > 0.0 {
+                        let s = trace.sample_mut(p, RegionId(id));
+                        s.wall += wait;
+                        s.mpi_time += wait;
+                        clock[p] = latest;
+                    }
+                }
+            }
+        }
+    }
+
+    // Program root: sums of depth-1 regions + final implicit barrier
+    // (everyone leaves at MPI_Finalize together).
+    let finale = clock.iter().copied().fold(0.0f64, f64::max);
+    for p in 0..spec.nprocs {
+        let mut total = RegionSample::default();
+        for &id in &depth1 {
+            total.add(trace.sample(p, RegionId(id)));
+        }
+        let finalize_wait = finale - clock[p];
+        total.wall += finalize_wait;
+        total.mpi_time += finalize_wait;
+        *trace.sample_mut(p, RegionId(0)) = total;
+    }
+
+    debug_assert!(trace.validate().is_ok());
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::cache::MemProfile;
+    use crate::simulator::comm::Dispatch;
+    use crate::simulator::machine::Machine;
+    use crate::workloads::spec::{RegionSpec, Work};
+
+    fn balanced_spec() -> WorkloadSpec {
+        let mut w = WorkloadSpec::new("balanced", 4, Machine::testbed_a());
+        w.total_units = 100.0;
+        w.region(RegionSpec::new(
+            1,
+            "compute",
+            0,
+            Work::compute(1e9, 1.0, MemProfile::new(32.0 * 1024.0, 0.8)),
+        ));
+        w.region(
+            RegionSpec::new(2, "exchange", 0, Work::default().with_net(1e6, 1.0)).sync(),
+        );
+        w
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = balanced_spec();
+        let a = simulate(&spec, 7);
+        let b = simulate(&spec, 7);
+        for p in 0..4 {
+            for r in 0..=2 {
+                assert_eq!(a.sample(p, RegionId(r)), b.sample(p, RegionId(r)));
+            }
+        }
+        let c = simulate(&spec, 8);
+        assert_ne!(
+            a.sample(0, RegionId(1)).instructions,
+            c.sample(0, RegionId(1)).instructions
+        );
+    }
+
+    #[test]
+    fn balanced_workload_is_balanced() {
+        let t = simulate(&balanced_spec(), 1);
+        let cpu0 = t.sample(0, RegionId(1)).cpu;
+        for p in 1..4 {
+            let rel = (t.sample(p, RegionId(1)).cpu - cpu0).abs() / cpu0;
+            assert!(rel < 0.05, "rank {p} deviates {rel}");
+        }
+    }
+
+    #[test]
+    fn static_skew_creates_imbalance_and_waits() {
+        let mut spec = balanced_spec();
+        spec.dispatch = Dispatch::StaticSkew(vec![0.5, 1.0, 1.0, 1.5]);
+        let t = simulate(&spec, 1);
+        // Rank 3 does 3x rank 0's work.
+        let r0 = t.sample(0, RegionId(1)).cpu;
+        let r3 = t.sample(3, RegionId(1)).cpu;
+        assert!(r3 / r0 > 2.5, "{r3} / {r0}");
+        // The barrier charges rank 0 the wait: wall >> cpu in region 2.
+        let s0 = t.sample(0, RegionId(2));
+        assert!(s0.wall > s0.cpu + 1.0, "wall {} cpu {}", s0.wall, s0.cpu);
+        // Program wall is (nearly) equal across ranks after finalize.
+        let w0 = t.program_wall(0);
+        let w3 = t.program_wall(3);
+        assert!((w0 - w3).abs() / w3 < 1e-9);
+    }
+
+    #[test]
+    fn parents_aggregate_children() {
+        let mut w = WorkloadSpec::new("nest", 2, Machine::testbed_a());
+        w.total_units = 10.0;
+        let outer = w.region(RegionSpec::new(1, "outer", 0, Work::default()));
+        w.region(RegionSpec::new(
+            2,
+            "inner1",
+            outer,
+            Work::compute(1e8, 1.0, MemProfile::new(1e4, 0.9)),
+        ));
+        w.region(RegionSpec::new(
+            3,
+            "inner2",
+            outer,
+            Work::compute(2e8, 1.0, MemProfile::new(1e4, 0.9)),
+        ));
+        let t = simulate(&w, 3);
+        let sum = t.sample(0, RegionId(2)).instructions + t.sample(0, RegionId(3)).instructions;
+        assert!((t.sample(0, RegionId(1)).instructions - sum).abs() < 1.0);
+        // Root ≈ outer.
+        assert!((t.program_wall(0) - t.sample(0, RegionId(1)).wall).abs() < 1e-9);
+    }
+
+    #[test]
+    fn master_only_regions() {
+        let mut w = WorkloadSpec::new("mw", 3, Machine::testbed_a());
+        w.master_rank = Some(0);
+        w.total_units = 30.0;
+        w.region(
+            RegionSpec::new(
+                1,
+                "dispatch",
+                0,
+                Work::default().with_net(1e4, 2.0),
+            )
+            .scope(Scope::MasterOnly)
+            .management(),
+        );
+        w.region(RegionSpec::new(
+            2,
+            "work",
+            0,
+            Work::compute(1e8, 1.0, MemProfile::new(1e4, 0.9)),
+        ).scope(Scope::WorkersOnly));
+        let t = simulate(&w, 1);
+        assert!(t.sample(0, RegionId(1)).mpi_bytes > 0.0);
+        assert_eq!(t.sample(1, RegionId(1)).mpi_bytes, 0.0);
+        assert_eq!(t.sample(0, RegionId(2)).instructions, 0.0);
+        assert!(t.sample(1, RegionId(2)).instructions > 0.0);
+        assert!(t.excluded(0, RegionId(1)));
+    }
+
+    #[test]
+    fn disk_time_in_wall_not_cpu() {
+        let mut w = WorkloadSpec::new("io", 1, Machine::testbed_a());
+        w.total_units = 1.0;
+        w.region(RegionSpec::new(
+            1,
+            "read",
+            0,
+            Work::default().with_disk(6e9, 100.0),
+        ));
+        let t = simulate(&w, 1);
+        let s = t.sample(0, RegionId(1));
+        assert!(s.wall > 50.0, "6 GB at 60 MB/s ≈ 100 s, got {}", s.wall);
+        assert!(s.cpu < 1.0);
+        assert_eq!(s.disk_bytes, 6e9);
+    }
+
+    #[test]
+    fn l2_rate_follows_cache_model() {
+        let mut w = WorkloadSpec::new("mem", 1, Machine::testbed_a());
+        w.total_units = 1.0;
+        let prof = MemProfile::new(6.0 * 1024.0 * 1024.0, 0.40);
+        w.region(RegionSpec::new(1, "hot", 0, Work::compute(1e10, 0.8, prof)));
+        let t = simulate(&w, 1);
+        let s = t.sample(0, RegionId(1));
+        let expected = cache::outcome(&prof, &Machine::testbed_a());
+        assert!((s.l2_miss_rate() - expected.l2_miss_rate).abs() < 1e-9);
+        // CPI grows past base because of stalls.
+        assert!(s.cpi() > 0.8);
+    }
+}

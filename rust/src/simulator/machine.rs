@@ -1,0 +1,120 @@
+//! Machine models for the paper's two testbeds (§6.1, §6.2).
+
+/// One cache level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheLevel {
+    pub size_bytes: f64,
+    pub line_bytes: f64,
+    /// Extra cycles a miss at the level *above* pays to reach this one.
+    pub latency_cycles: f64,
+}
+
+/// A cluster node model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Machine {
+    pub name: String,
+    /// Core clock.
+    pub freq_hz: f64,
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+    /// Cycles an L2 miss pays to reach DRAM.
+    pub mem_latency_cycles: f64,
+    /// Interconnect (the paper's testbeds use 1000 Mbps Ethernet).
+    pub net_bandwidth_bps: f64,
+    pub net_latency_s: f64,
+    /// Local disk.
+    pub disk_bandwidth_bps: f64,
+    pub disk_latency_s: f64,
+}
+
+impl Machine {
+    /// §6.1 testbed: dual AMD Opteron nodes — 64 KB L1D, 64 KB L1I,
+    /// 1 MB L2; 1000 Mbps network; linux-2.6.19.
+    pub fn testbed_a() -> Machine {
+        Machine {
+            name: "testbed-a/opteron".into(),
+            freq_hz: 2.2e9,
+            l1: CacheLevel {
+                size_bytes: 64.0 * 1024.0,
+                line_bytes: 64.0,
+                latency_cycles: 12.0,
+            },
+            l2: CacheLevel {
+                size_bytes: 1024.0 * 1024.0,
+                line_bytes: 64.0,
+                latency_cycles: 40.0,
+            },
+            mem_latency_cycles: 220.0,
+            net_bandwidth_bps: 1e9,
+            net_latency_s: 60e-6,
+            disk_bandwidth_bps: 60e6 * 8.0,
+            disk_latency_s: 8e-3,
+        }
+    }
+
+    /// §6.2 testbed: 2 GHz Intel Xeon E5335 quad-core — 128 KB L1D,
+    /// 128 KB L1I, 8 MB L2; same network class.
+    pub fn testbed_b() -> Machine {
+        Machine {
+            name: "testbed-b/xeon-e5335".into(),
+            freq_hz: 2.0e9,
+            l1: CacheLevel {
+                size_bytes: 128.0 * 1024.0,
+                line_bytes: 64.0,
+                latency_cycles: 14.0,
+            },
+            l2: CacheLevel {
+                size_bytes: 8.0 * 1024.0 * 1024.0,
+                line_bytes: 64.0,
+                latency_cycles: 35.0,
+            },
+            mem_latency_cycles: 240.0,
+            net_bandwidth_bps: 1e9,
+            net_latency_s: 55e-6,
+            disk_bandwidth_bps: 80e6 * 8.0,
+            disk_latency_s: 7e-3,
+        }
+    }
+
+    /// Seconds to move `bytes` over the network in `msgs` messages.
+    pub fn net_time(&self, bytes: f64, msgs: f64) -> f64 {
+        msgs * self.net_latency_s + bytes * 8.0 / self.net_bandwidth_bps
+    }
+
+    /// Seconds to move `bytes` to/from disk in `ops` operations.
+    pub fn disk_time(&self, bytes: f64, ops: f64) -> f64 {
+        ops * self.disk_latency_s + bytes * 8.0 / self.disk_bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbeds_match_paper_specs() {
+        let a = Machine::testbed_a();
+        assert_eq!(a.l1.size_bytes, 64.0 * 1024.0);
+        assert_eq!(a.l2.size_bytes, 1024.0 * 1024.0);
+        let b = Machine::testbed_b();
+        assert_eq!(b.freq_hz, 2.0e9);
+        assert_eq!(b.l2.size_bytes, 8.0 * 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn net_time_scales() {
+        let m = Machine::testbed_a();
+        // 1 GB over 1 Gbps ≈ 8 s.
+        let t = m.net_time(1e9, 1.0);
+        assert!((t - 8.0).abs() < 0.01, "{t}");
+        assert!(m.net_time(0.0, 10.0) > m.net_time(0.0, 1.0));
+    }
+
+    #[test]
+    fn disk_time_scales() {
+        let m = Machine::testbed_a();
+        // 106 GB at 60 MB/s ≈ 1766 s — the paper's CR8 magnitude.
+        let t = m.disk_time(106e9, 1.0);
+        assert!(t > 1000.0 && t < 3000.0, "{t}");
+    }
+}

@@ -1,0 +1,29 @@
+//! SPMD execution simulator — the testbed substitute (DESIGN.md §2).
+//!
+//! The paper measures real MPI applications with PAPI + PMPI + systemtap
+//! on two clusters. Neither the clusters, nor the kernel patches, nor
+//! the proprietary application sources are available here, so this
+//! module produces the same per-process × per-region measurement tuples
+//! from behavioural *workload specs* (`workloads/`):
+//!
+//! - `machine`  — the two testbeds' CPU/cache/network/disk parameters;
+//! - `cache`    — analytic two-level cache model (working set +
+//!                locality → L1/L2 miss rates, penalty cycles);
+//! - `comm`     — MPI cost model (p2p, collectives, master/worker
+//!                dispatch) and the static-vs-dynamic load imbalance
+//!                model the ST case study pivots on;
+//! - `engine`   — walks each process through the region tree,
+//!                accumulates instructions/cycles/IO, resolves barrier
+//!                waits (the wall-vs-CPU clock gap), and emits a
+//!                `trace::Trace`.
+//!
+//! All randomness is a small multiplicative jitter from `util::rng`,
+//! deterministic per seed (property-tested).
+
+pub mod cache;
+pub mod comm;
+pub mod engine;
+pub mod machine;
+
+pub use engine::simulate;
+pub use machine::Machine;

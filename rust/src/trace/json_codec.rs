@@ -1,0 +1,265 @@
+//! JSON trace codec (primary on-disk format).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::RegionSample;
+use crate::regions::{RegionId, RegionTree};
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+const FIELDS: [&str; 11] = [
+    "wall", "cpu", "cycles", "instructions", "l1_miss", "l1_access", "l2_miss",
+    "l2_access", "mpi_time", "mpi_bytes", "disk_bytes",
+];
+
+fn sample_to_json(s: &RegionSample) -> Json {
+    // Compact array encoding: field order is FIELDS.
+    Json::from_f64s(&[
+        s.wall, s.cpu, s.cycles, s.instructions, s.l1_miss, s.l1_access, s.l2_miss,
+        s.l2_access, s.mpi_time, s.mpi_bytes, s.disk_bytes,
+    ])
+}
+
+fn sample_from_json(v: &Json) -> Result<RegionSample> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("sample must be an array"))?;
+    if arr.len() != FIELDS.len() {
+        bail!("sample has {} fields, expected {}", arr.len(), FIELDS.len());
+    }
+    let g = |i: usize| -> Result<f64> {
+        arr[i]
+            .as_f64()
+            .ok_or_else(|| anyhow!("sample field {} not a number", FIELDS[i]))
+    };
+    Ok(RegionSample {
+        wall: g(0)?,
+        cpu: g(1)?,
+        cycles: g(2)?,
+        instructions: g(3)?,
+        l1_miss: g(4)?,
+        l1_access: g(5)?,
+        l2_miss: g(6)?,
+        l2_access: g(7)?,
+        mpi_time: g(8)?,
+        mpi_bytes: g(9)?,
+        disk_bytes: g(10)?,
+    })
+}
+
+/// Encode a trace to pretty JSON.
+pub fn to_json(trace: &Trace) -> Json {
+    let tree = &trace.tree;
+    let regions: Vec<Json> = tree
+        .region_ids()
+        .map(|id| {
+            let info = tree.info(id);
+            Json::obj()
+                .push("id", Json::Num(id.0 as f64))
+                .push("name", Json::Str(info.name.clone()))
+                .push(
+                    "parent",
+                    Json::Num(info.parent.map(|p| p.0).unwrap_or(0) as f64),
+                )
+                .push("management", Json::Bool(info.management))
+        })
+        .collect();
+    let procs: Vec<Json> = (0..trace.nprocs())
+        .map(|p| {
+            let samples: Vec<Json> = (0..=trace.nregions())
+                .map(|r| sample_to_json(trace.sample(p, RegionId(r))))
+                .collect();
+            Json::obj()
+                .push("rank", Json::Num(p as f64))
+                .push("samples", Json::Arr(samples))
+        })
+        .collect();
+    let meta = Json::Obj(
+        trace
+            .meta
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    );
+    Json::obj()
+        .push("format", Json::Str("autoanalyzer-trace-v1".into()))
+        .push("program", Json::Str(tree.program().to_string()))
+        .push(
+            "master_rank",
+            trace
+                .master_rank
+                .map(|m| Json::Num(m as f64))
+                .unwrap_or(Json::Null),
+        )
+        .push("fields", Json::from_strs(&FIELDS))
+        .push("regions", Json::Arr(regions))
+        .push("processes", Json::Arr(procs))
+        .push("meta", meta)
+}
+
+/// Decode a trace from JSON.
+pub fn from_json(v: &Json) -> Result<Trace> {
+    match v.get("format").and_then(Json::as_str) {
+        Some("autoanalyzer-trace-v1") => {}
+        other => bail!("unsupported trace format {:?}", other),
+    }
+    let program = v
+        .get("program")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing program"))?;
+    let regions = v
+        .get("regions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing regions"))?;
+    // Children may carry smaller ids than their parents (ST's Fig. 8
+    // numbering), so the tree is built in one two-pass step.
+    let mut nodes: Vec<(usize, usize, &str, bool)> = Vec::with_capacity(regions.len());
+    for r in regions {
+        let id = r
+            .get("id")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("region missing id"))?;
+        let name = r.get("name").and_then(Json::as_str).unwrap_or("?");
+        let parent = r.get("parent").and_then(Json::as_usize).unwrap_or(0);
+        let management = r.get("management").and_then(Json::as_bool).unwrap_or(false);
+        nodes.push((id, parent, name, management));
+    }
+    let tree = RegionTree::from_nodes(program, &nodes).map_err(anyhow::Error::msg)?;
+    let procs = v
+        .get("processes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing processes"))?;
+    let mut trace = Trace::new(tree, procs.len());
+    for (p, pv) in procs.iter().enumerate() {
+        let rank = pv
+            .get("rank")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("process missing rank"))?;
+        if rank != p {
+            bail!("processes must be in rank order");
+        }
+        let samples = pv
+            .get("samples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("process {} missing samples", p))?;
+        if samples.len() != trace.nregions() + 1 {
+            bail!(
+                "process {} has {} samples, expected {}",
+                p,
+                samples.len(),
+                trace.nregions() + 1
+            );
+        }
+        for (r, sv) in samples.iter().enumerate() {
+            *trace.sample_mut(p, RegionId(r)) =
+                sample_from_json(sv).with_context(|| format!("process {p} region {r}"))?;
+        }
+    }
+    trace.master_rank = v.get("master_rank").and_then(Json::as_usize);
+    if let Some(Json::Obj(fields)) = v.get("meta") {
+        for (k, val) in fields {
+            if let Some(s) = val.as_str() {
+                trace.set_meta(k, s);
+            }
+        }
+    }
+    trace.validate().map_err(|e| anyhow!(e))?;
+    Ok(trace)
+}
+
+pub fn save(trace: &Trace, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, to_json(trace).pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn load(path: &std::path::Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_json(&Json::parse(&text).context("parsing trace JSON")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut tree = RegionTree::new("demo");
+        let a = tree.add(RegionId(0), "outer");
+        tree.add(a, "inner");
+        tree.add_management(RegionId(0), "dispatch");
+        let mut t = Trace::new(tree, 3);
+        t.master_rank = Some(0);
+        t.set_meta("seed", "42");
+        for p in 0..3 {
+            for r in 0..=3 {
+                let s = t.sample_mut(p, RegionId(r));
+                s.wall = (p * 10 + r) as f64 + 0.5;
+                s.cpu = s.wall * 0.9;
+                s.instructions = 1e9 * (r as f64 + 1.0);
+                s.cycles = 2.0 * s.instructions;
+                s.l1_access = 1e8;
+                s.l1_miss = 1e6;
+                s.l2_access = 1e6;
+                s.l2_miss = 2e5;
+                s.mpi_bytes = 1e5 * p as f64;
+                s.disk_bytes = 3e7;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let t = sample_trace();
+        let j = to_json(&t);
+        let t2 = from_json(&j).unwrap();
+        assert_eq!(t2.nprocs(), 3);
+        assert_eq!(t2.nregions(), 3);
+        assert_eq!(t2.master_rank, Some(0));
+        assert_eq!(t2.get_meta("seed"), Some("42"));
+        assert_eq!(t2.tree.info(RegionId(2)).parent, Some(RegionId(1)));
+        assert!(t2.tree.info(RegionId(3)).management);
+        for p in 0..3 {
+            for r in 0..=3 {
+                assert_eq!(t.sample(p, RegionId(r)), t2.sample(p, RegionId(r)));
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_through_text() {
+        let t = sample_trace();
+        let text = to_json(&t).pretty();
+        let t2 = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t.sample(2, RegionId(1)), t2.sample(2, RegionId(1)));
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let j = Json::obj().push("format", Json::Str("bogus".into()));
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_sample_width() {
+        let t = sample_trace();
+        let mut j = to_json(&t);
+        // Truncate one sample array.
+        if let Json::Obj(ref mut fields) = j {
+            for (k, v) in fields.iter_mut() {
+                if k == "processes" {
+                    if let Json::Arr(procs) = v {
+                        if let Json::Obj(pf) = &mut procs[0] {
+                            for (pk, pv) in pf.iter_mut() {
+                                if pk == "samples" {
+                                    if let Json::Arr(ss) = pv {
+                                        ss.pop();
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(from_json(&j).is_err());
+    }
+}

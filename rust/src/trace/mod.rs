@@ -1,0 +1,12 @@
+//! Trace schema + codecs — the "data management" component of Fig. 6.
+//!
+//! The paper collects per-node performance data and ships it to one node
+//! as XML; we keep JSON as the primary on-disk format (diff-friendly,
+//! parsed by `util::json`) and provide the paper's XML as an alternate
+//! codec for fidelity.
+
+pub mod schema;
+pub mod json_codec;
+pub mod xml_codec;
+
+pub use schema::Trace;

@@ -1,0 +1,171 @@
+//! The in-memory trace: one `RegionSample` per (process, region), plus
+//! the region tree and run metadata.
+
+use crate::metrics::RegionSample;
+use crate::regions::{RegionId, RegionTree};
+
+/// A complete performance trace of one SPMD run.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub tree: RegionTree,
+    /// `samples[p][r]` = measurements of region id `r` in process `p`.
+    /// Index 0 is the whole program (the root region).
+    samples: Vec<Vec<RegionSample>>,
+    /// Rank of the master process, if the application has one whose
+    /// management regions must be excluded from similarity analysis.
+    pub master_rank: Option<usize>,
+    /// Free-form run metadata (machine, parameters, seed, ...).
+    pub meta: Vec<(String, String)>,
+}
+
+impl Trace {
+    pub fn new(tree: RegionTree, nprocs: usize) -> Trace {
+        let width = tree.len() + 1;
+        Trace {
+            tree,
+            samples: vec![vec![RegionSample::default(); width]; nprocs],
+            master_rank: None,
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn nregions(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn sample(&self, proc: usize, region: RegionId) -> &RegionSample {
+        &self.samples[proc][region.0]
+    }
+
+    pub fn sample_mut(&mut self, proc: usize, region: RegionId) -> &mut RegionSample {
+        &mut self.samples[proc][region.0]
+    }
+
+    /// Wall-clock time of the whole program in process `p` (WPWT).
+    pub fn program_wall(&self, proc: usize) -> f64 {
+        self.samples[proc][0].wall
+    }
+
+    /// The program's wall time = max over processes (they end together
+    /// at MPI_Finalize, but the slowest defines the run).
+    pub fn run_wall(&self) -> f64 {
+        (0..self.nprocs())
+            .map(|p| self.program_wall(p))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn get_meta(&self, key: &str) -> Option<&str> {
+        self.meta
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// True if `region` should be excluded for `proc` in similarity
+    /// analysis: management regions of the master process (§4.2.1).
+    pub fn excluded(&self, proc: usize, region: RegionId) -> bool {
+        self.master_rank == Some(proc) && self.tree.info(region).management
+    }
+
+    /// Sum a closure over all processes for one region (used by
+    /// per-region averaging; `region_means` in metrics::vectors is the
+    /// metric-aware wrapper).
+    pub fn region_mean(&self, region: RegionId, f: impl Fn(&RegionSample) -> f64) -> f64 {
+        let n = self.nprocs().max(1);
+        (0..self.nprocs())
+            .map(|p| f(self.sample(p, region)))
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Structural sanity: every process has a full sample row and the
+    /// tree validates.
+    pub fn validate(&self) -> Result<(), String> {
+        self.tree.validate()?;
+        let width = self.tree.len() + 1;
+        for (p, row) in self.samples.iter().enumerate() {
+            if row.len() != width {
+                return Err(format!(
+                    "process {p} has {} samples, expected {width}",
+                    row.len()
+                ));
+            }
+        }
+        if let Some(m) = self.master_rank {
+            if m >= self.nprocs() {
+                return Err(format!("master rank {m} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regions::RegionId;
+
+    fn tiny_trace() -> Trace {
+        let mut tree = RegionTree::new("tiny");
+        let a = tree.add(RegionId(0), "a");
+        let _b = tree.add(RegionId(0), "b");
+        let _a1 = tree.add(a, "a1");
+        let mut t = Trace::new(tree, 2);
+        for p in 0..2 {
+            t.sample_mut(p, RegionId(0)).wall = 100.0;
+            t.sample_mut(p, RegionId(1)).wall = 60.0 + p as f64;
+            t.sample_mut(p, RegionId(2)).wall = 40.0;
+            t.sample_mut(p, RegionId(3)).wall = 30.0;
+        }
+        t
+    }
+
+    #[test]
+    fn dimensions() {
+        let t = tiny_trace();
+        assert_eq!(t.nprocs(), 2);
+        assert_eq!(t.nregions(), 3);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn program_wall_is_root() {
+        let t = tiny_trace();
+        assert_eq!(t.program_wall(0), 100.0);
+        assert_eq!(t.run_wall(), 100.0);
+    }
+
+    #[test]
+    fn region_mean_averages_processes() {
+        let t = tiny_trace();
+        assert!((t.region_mean(RegionId(1), |s| s.wall) - 60.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exclusion_only_for_master_management() {
+        let mut tree = RegionTree::new("m");
+        let mgmt = tree.add_management(RegionId(0), "dispatch");
+        let work = tree.add(RegionId(0), "work");
+        let mut t = Trace::new(tree, 2);
+        t.master_rank = Some(0);
+        assert!(t.excluded(0, mgmt));
+        assert!(!t.excluded(1, mgmt));
+        assert!(!t.excluded(0, work));
+    }
+
+    #[test]
+    fn meta_round_trip() {
+        let mut t = tiny_trace();
+        t.set_meta("shots", "627");
+        assert_eq!(t.get_meta("shots"), Some("627"));
+        assert_eq!(t.get_meta("missing"), None);
+    }
+}

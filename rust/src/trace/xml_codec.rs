@@ -1,0 +1,304 @@
+//! XML trace codec — the paper stores collected data "in XML files"
+//! (§5, Data management). Provided for fidelity and interop; the JSON
+//! codec is the primary format. Hand-rolled writer + a small
+//! purpose-built reader (elements, attributes, text; no DTD/namespaces
+//! — the schema is ours).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::RegionSample;
+use crate::regions::{RegionId, RegionTree};
+use crate::trace::Trace;
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+fn unesc(s: &str) -> String {
+    s.replace("&quot;", "\"")
+        .replace("&gt;", ">")
+        .replace("&lt;", "<")
+        .replace("&amp;", "&")
+}
+
+/// Encode a trace to the XML layout:
+/// `<trace program=..><region id=.. name=.. parent=..
+/// management=../><process rank=..><sample region=.. wall=..
+/// .../></process></trace>`.
+pub fn to_xml(trace: &Trace) -> String {
+    let mut out = String::from("<?xml version=\"1.0\" encoding=\"UTF-8\"?>\n");
+    out.push_str(&format!(
+        "<trace program=\"{}\" master_rank=\"{}\">\n",
+        esc(trace.tree.program()),
+        trace
+            .master_rank
+            .map(|m| m.to_string())
+            .unwrap_or_else(|| "none".into())
+    ));
+    for (k, v) in &trace.meta {
+        out.push_str(&format!("  <meta key=\"{}\" value=\"{}\"/>\n", esc(k), esc(v)));
+    }
+    for id in trace.tree.region_ids() {
+        let info = trace.tree.info(id);
+        out.push_str(&format!(
+            "  <region id=\"{}\" name=\"{}\" parent=\"{}\" management=\"{}\"/>\n",
+            id.0,
+            esc(&info.name),
+            info.parent.map(|p| p.0).unwrap_or(0),
+            info.management
+        ));
+    }
+    for p in 0..trace.nprocs() {
+        out.push_str(&format!("  <process rank=\"{}\">\n", p));
+        for r in 0..=trace.nregions() {
+            let s = trace.sample(p, RegionId(r));
+            out.push_str(&format!(
+                "    <sample region=\"{}\" wall=\"{}\" cpu=\"{}\" cycles=\"{}\" \
+                 instructions=\"{}\" l1_miss=\"{}\" l1_access=\"{}\" l2_miss=\"{}\" \
+                 l2_access=\"{}\" mpi_time=\"{}\" mpi_bytes=\"{}\" disk_bytes=\"{}\"/>\n",
+                r,
+                s.wall,
+                s.cpu,
+                s.cycles,
+                s.instructions,
+                s.l1_miss,
+                s.l1_access,
+                s.l2_miss,
+                s.l2_access,
+                s.mpi_time,
+                s.mpi_bytes,
+                s.disk_bytes
+            ));
+        }
+        out.push_str("  </process>\n");
+    }
+    out.push_str("</trace>\n");
+    out
+}
+
+/// A parsed XML tag: name + attributes. Self-closing tags are flagged.
+#[derive(Debug)]
+struct Tag {
+    name: String,
+    attrs: Vec<(String, String)>,
+    closing: bool,
+    self_closing: bool,
+}
+
+impl Tag {
+    fn attr(&self, name: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.attr(name)
+            .ok_or_else(|| anyhow!("<{}> missing attribute {}", self.name, name))
+    }
+
+    fn f64(&self, name: &str) -> Result<f64> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| anyhow!("<{}> attribute {} not a number", self.name, name))
+    }
+}
+
+fn parse_tags(text: &str) -> Result<Vec<Tag>> {
+    let mut tags = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != b'<' {
+            i += 1;
+            continue;
+        }
+        let end = text[i..]
+            .find('>')
+            .map(|e| i + e)
+            .ok_or_else(|| anyhow!("unterminated tag at byte {i}"))?;
+        let body = &text[i + 1..end];
+        i = end + 1;
+        if body.starts_with('?') || body.starts_with('!') {
+            continue; // declaration / comment
+        }
+        let closing = body.starts_with('/');
+        let body = body.trim_start_matches('/');
+        let self_closing = body.ends_with('/');
+        let body = body.trim_end_matches('/').trim();
+        let (name, rest) = body
+            .split_once(char::is_whitespace)
+            .unwrap_or((body, ""));
+        let mut attrs = Vec::new();
+        let mut rest = rest.trim();
+        while !rest.is_empty() {
+            let eq = rest
+                .find('=')
+                .ok_or_else(|| anyhow!("malformed attribute in <{name}>"))?;
+            let key = rest[..eq].trim().to_string();
+            let after = rest[eq + 1..].trim_start();
+            if !after.starts_with('"') {
+                bail!("unquoted attribute value in <{name}>");
+            }
+            let close = after[1..]
+                .find('"')
+                .ok_or_else(|| anyhow!("unterminated attribute in <{name}>"))?;
+            attrs.push((key, unesc(&after[1..1 + close])));
+            rest = after[close + 2..].trim_start();
+        }
+        tags.push(Tag {
+            name: name.to_string(),
+            attrs,
+            closing,
+            self_closing,
+        });
+    }
+    Ok(tags)
+}
+
+/// Decode a trace from the XML layout produced by `to_xml`.
+pub fn from_xml(text: &str) -> Result<Trace> {
+    let tags = parse_tags(text)?;
+    let root = tags
+        .iter()
+        .find(|t| t.name == "trace" && !t.closing)
+        .ok_or_else(|| anyhow!("no <trace> element"))?;
+    let program = root.req("program")?.to_string();
+    let master_rank = match root.attr("master_rank") {
+        Some("none") | None => None,
+        Some(v) => Some(
+            v.parse::<usize>()
+                .map_err(|_| anyhow!("bad master_rank {v}"))?,
+        ),
+    };
+
+    let mut nodes: Vec<(usize, usize, &str, bool)> = Vec::new();
+    for t in tags.iter().filter(|t| t.name == "region" && !t.closing) {
+        let id: usize = t.req("id")?.parse().map_err(|_| anyhow!("bad region id"))?;
+        let parent: usize = t
+            .req("parent")?
+            .parse()
+            .map_err(|_| anyhow!("bad parent"))?;
+        let mgmt = t.attr("management") == Some("true");
+        nodes.push((id, parent, t.req("name")?, mgmt));
+    }
+    let tree = RegionTree::from_nodes(&program, &nodes).map_err(anyhow::Error::msg)?;
+
+    let nprocs = tags
+        .iter()
+        .filter(|t| t.name == "process" && !t.closing && !t.self_closing)
+        .count();
+    let mut trace = Trace::new(tree, nprocs);
+    trace.master_rank = master_rank;
+
+    let mut current_proc: Option<usize> = None;
+    for t in &tags {
+        match (t.name.as_str(), t.closing) {
+            ("meta", false) => {
+                trace.set_meta(t.req("key")?, t.req("value")?);
+            }
+            ("process", false) => {
+                current_proc = Some(
+                    t.req("rank")?
+                        .parse()
+                        .map_err(|_| anyhow!("bad rank"))?,
+                );
+            }
+            ("process", true) => current_proc = None,
+            ("sample", false) => {
+                let p = current_proc.ok_or_else(|| anyhow!("<sample> outside <process>"))?;
+                let r: usize = t.req("region")?.parse().map_err(|_| anyhow!("bad region"))?;
+                if p >= trace.nprocs() || r > trace.nregions() {
+                    bail!("sample ({p},{r}) out of range");
+                }
+                *trace.sample_mut(p, RegionId(r)) = RegionSample {
+                    wall: t.f64("wall")?,
+                    cpu: t.f64("cpu")?,
+                    cycles: t.f64("cycles")?,
+                    instructions: t.f64("instructions")?,
+                    l1_miss: t.f64("l1_miss")?,
+                    l1_access: t.f64("l1_access")?,
+                    l2_miss: t.f64("l2_miss")?,
+                    l2_access: t.f64("l2_access")?,
+                    mpi_time: t.f64("mpi_time")?,
+                    mpi_bytes: t.f64("mpi_bytes")?,
+                    disk_bytes: t.f64("disk_bytes")?,
+                };
+            }
+            _ => {}
+        }
+    }
+    trace.validate().map_err(|e| anyhow!(e))?;
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut tree = RegionTree::new("xml \"demo\" <app>");
+        let a = tree.add(RegionId(0), "outer & loop");
+        tree.add(a, "inner");
+        let mut t = Trace::new(tree, 2);
+        t.master_rank = Some(1);
+        t.set_meta("note", "a<b & c>d");
+        for p in 0..2 {
+            for r in 0..=2 {
+                let s = t.sample_mut(p, RegionId(r));
+                s.wall = 1.5 * (p + r + 1) as f64;
+                s.cpu = s.wall - 0.25;
+                s.instructions = 123456.0;
+                s.cycles = 234567.0;
+                s.l1_access = 10.0;
+                s.l1_miss = 1.0;
+                s.l2_access = 5.0;
+                s.l2_miss = 2.0;
+                s.mpi_time = 0.125;
+                s.mpi_bytes = 4096.0;
+                s.disk_bytes = 8192.0;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn xml_round_trip() {
+        let t = sample_trace();
+        let xml = to_xml(&t);
+        let t2 = from_xml(&xml).unwrap();
+        assert_eq!(t2.nprocs(), 2);
+        assert_eq!(t2.nregions(), 2);
+        assert_eq!(t2.master_rank, Some(1));
+        assert_eq!(t2.tree.program(), "xml \"demo\" <app>");
+        assert_eq!(t2.get_meta("note"), Some("a<b & c>d"));
+        for p in 0..2 {
+            for r in 0..=2 {
+                assert_eq!(t.sample(p, RegionId(r)), t2.sample(p, RegionId(r)));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_missing_root() {
+        assert!(from_xml("<?xml version=\"1.0\"?><oops/>").is_err());
+    }
+
+    #[test]
+    fn rejects_sample_outside_process() {
+        let xml = "<trace program=\"x\"><sample region=\"0\" wall=\"1\" cpu=\"1\" \
+                   cycles=\"1\" instructions=\"1\" l1_miss=\"0\" l1_access=\"0\" \
+                   l2_miss=\"0\" l2_access=\"0\" mpi_time=\"0\" mpi_bytes=\"0\" \
+                   disk_bytes=\"0\"/></trace>";
+        assert!(from_xml(xml).is_err());
+    }
+
+    #[test]
+    fn escaping_round_trips() {
+        assert_eq!(unesc(&esc("a&\"<>b")), "a&\"<>b");
+    }
+}

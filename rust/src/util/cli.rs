@@ -1,0 +1,168 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters, defaults and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator (first item is the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_else(|| "autoanalyzer".into());
+        let mut positionals = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = std::mem::take(&mut rest[i]);
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    flags.push(body.to_string());
+                } else {
+                    // Expect a value next.
+                    i += 1;
+                    let v = rest.get_mut(i).map(std::mem::take).ok_or_else(|| {
+                        CliError(format!("option --{body} expects a value"))
+                    })?;
+                    options.insert(body.to_string(), v);
+                }
+            } else {
+                positionals.push(a);
+            }
+            i += 1;
+        }
+        Ok(Args {
+            program,
+            positionals,
+            options,
+            flags,
+        })
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, CliError> {
+        Args::parse(std::env::args(), known_flags)
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(
+            &["prog", "analyze", "--workload", "st", "--procs=8", "--verbose"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional(0), Some("analyze"));
+        assert_eq!(a.str_opt("workload"), Some("st"));
+        assert_eq!(a.usize_or("procs", 4).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["prog"], &[]);
+        assert_eq!(a.usize_or("procs", 4).unwrap(), 4);
+        assert_eq!(a.str_or("workload", "synthetic"), "synthetic");
+        assert_eq!(a.f64_or("threshold", 0.1).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(
+            ["prog", "--procs"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap_err();
+        assert!(e.0.contains("--procs"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["prog", "--procs", "eight"], &[]);
+        assert!(a.usize_or("procs", 4).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates replacing unavailable third-party crates (see
+//! DESIGN.md §2): JSON codec, matrix, RNG, stats, ascii tables, property
+//! testing, CLI parsing.
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tables;

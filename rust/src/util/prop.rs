@@ -1,0 +1,174 @@
+//! Property-test mini-framework (proptest is unavailable offline).
+//!
+//! Each property runs `cases` times with inputs drawn from a seeded
+//! `Rng`; on failure the failing case index and seed are printed so the
+//! exact input regenerates with `PROP_SEED=<seed> PROP_CASE=<i>`. A
+//! light-weight shrinking pass is provided for `Vec`-shaped inputs via
+//! `shrink_vec` (halve-and-retry), which covers the collection-valued
+//! properties we state on clustering and search invariants.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases per property (override with PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA07A_11A5_2011)
+}
+
+/// Run `prop` for `default_cases()` random cases. `gen` builds an input
+/// from the per-case RNG. Panics (failing the enclosing #[test]) with a
+/// reproduction line on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = base_seed();
+    let only_case: Option<usize> = std::env::var("PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let cases = default_cases();
+    for case in 0..cases {
+        if let Some(c) = only_case {
+            if case != c {
+                continue;
+            }
+        }
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (reproduce with \
+                 PROP_SEED={seed} PROP_CASE={case}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Greedy halving shrinker for vector inputs: tries progressively
+/// smaller prefixes/suffixes that still fail, returning a (locally)
+/// minimal failing vector. Use inside a failing property by hand when
+/// diagnosing; tests call it to assert shrinkers terminate.
+pub fn shrink_vec<T: Clone>(
+    input: &[T],
+    still_fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    loop {
+        let mut reduced = false;
+        let mut chunk = cur.len() / 2;
+        while chunk >= 1 {
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut cand = cur.clone();
+                cand.drain(i..i + chunk);
+                if !cand.is_empty() && still_fails(&cand) {
+                    cur = cand;
+                    reduced = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        if !reduced {
+            return cur;
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::*;
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| rng.range_f64(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    /// Matrix of performance vectors: `m` processes x `n` regions with a
+    /// few distinct "behaviour groups" so clustering has structure.
+    pub fn grouped_matrix(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+        groups: usize,
+    ) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let centers: Vec<Vec<f32>> = (0..groups)
+            .map(|_| f32_vec(rng, n, 10.0, 1000.0))
+            .collect();
+        let mut rows = Vec::with_capacity(m);
+        let mut labels = Vec::with_capacity(m);
+        for _ in 0..m {
+            let g = rng.below(groups);
+            labels.push(g);
+            rows.push(
+                centers[g]
+                    .iter()
+                    .map(|&c| c * rng.jitter(0.002) as f32)
+                    .collect(),
+            );
+        }
+        (rows, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "reverse twice is identity",
+            |rng| {
+                let len = rng.range(1, 20);
+                gen::f32_vec(rng, len, -5.0, 5.0)
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Failing predicate: contains a negative number.
+        let input = vec![1, 5, -3, 7, 9, -2, 4];
+        let small = shrink_vec(&input, |v| v.iter().any(|&x| x < 0));
+        assert!(small.iter().any(|&x| x < 0));
+        assert_eq!(small.len(), 1, "shrunk to a single witness: {small:?}");
+    }
+
+    #[test]
+    fn grouped_matrix_labels_align() {
+        let mut rng = Rng::new(1);
+        let (rows, labels) = gen::grouped_matrix(&mut rng, 12, 4, 3);
+        assert_eq!(rows.len(), 12);
+        assert_eq!(labels.len(), 12);
+        assert!(labels.iter().all(|&g| g < 3));
+    }
+}

@@ -1,0 +1,180 @@
+//! ASCII table rendering for reports and the per-figure bench harnesses.
+//! Every experiment in EXPERIMENTS.md is regenerated through this module
+//! so the emitted rows diff cleanly between runs.
+
+/// A simple left-aligned table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(widths[c] - cell.len() + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// GitHub-flavoured markdown rendering (used when appending results
+    /// to EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format helpers used all over the eval harnesses.
+pub fn f2(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{:.4}", x)
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.1} {}", v, UNITS[u])
+}
+
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["region", "crnm"]);
+        t.row_strs(&["11", "0.41"]);
+        t.row_strs(&["8", "0.3"]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| region | crnm |"));
+        // all lines same width
+        let widths: Vec<usize> = r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        let md = t.render_markdown();
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_row() {
+        let mut t = Table::new("x", &["a"]);
+        t.row_strs(&["1", "2"]);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(1536.0), "1.5 KB");
+        assert_eq!(human_bytes(106.0 * 1024.0 * 1024.0 * 1024.0), "106.0 GB");
+        assert_eq!(human_secs(0.002), "2.0 ms");
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload models of the paper's three applications plus synthetic
+//! generators (DESIGN.md §2 substitution table). Region ids follow the
+//! paper's figures (Fig. 8 for ST, Fig. 15 fine-grain, Fig. 18 for
+//! MPIBZIP2) so analysis output reads like the paper.
+pub mod mpibzip2;
+pub mod npar1way;
+pub mod optimize;
+pub mod spec;
+pub mod st;
+pub mod synthetic;
+pub mod st_fine;

@@ -1,0 +1,189 @@
+//! Optimization transforms — the paper's fixes as spec rewrites.
+//!
+//! §6.1.1 (ST):
+//! - *dissimilarity fix*: replace static load dispatching with dynamic
+//!   dispatching → the per-rank shot-cost skew disappears (a small
+//!   self-scheduling residual and per-unit request overhead remain).
+//! - *disparity fixes*: region 8 — "buffering as many data into the
+//!   memory" → far fewer disk operations and less re-read traffic;
+//!   region 11 — "breaking the loops into small ones and rearranging
+//!   the data storage" → smaller working set, better locality, slightly
+//!   more instructions (the paper finds the optimized region 11 is
+//!   still a bottleneck, but its root cause shifts from L2 misses to
+//!   instruction count, and its CRNM drops 0.41 → 0.26).
+//!
+//! §6.2.2 (NPAR1WAY): common-subexpression elimination in regions 3 and
+//! 12 — instructions drop (−36.32 % / −16.93 %) while the absolute
+//! number of memory references stays, so refs-per-instruction rises and
+//! the wall-clock gain is smaller than the instruction cut (paper:
+//! −20.33 % / −8.46 %).
+//!
+//! §6.3 (MPIBZIP2): no transform exists — the compressor is mature and
+//! the transferred data is already compressed; `mpibzip2_fixes` returns
+//! None to record that verdict.
+
+use crate::simulator::cache::MemProfile;
+use crate::workloads::npar1way::NparParams;
+use crate::workloads::st::StParams;
+
+/// ST: dynamic dispatching removes the rank skew (§6.1.1).
+pub fn st_fix_dissimilarity(params: &StParams) -> StParams {
+    let mut p = params.clone();
+    // Self-scheduling balances to the chunk granularity; keep a ±1%
+    // residual so the fix is honest about dynamic dispatch overheads.
+    p.r11_skew = Some(vec![1.005, 0.995, 1.0, 1.002, 0.998, 1.004, 0.996, 1.0]);
+    p
+}
+
+/// ST: buffer region 8's reads + block region 11's loops (§6.1.1).
+pub fn st_fix_disparity(params: &StParams) -> StParams {
+    let mut p = params.clone();
+    // Region 8: one bulk sequential read into memory buffers instead of
+    // per-record seeks; re-reads across shots disappear.
+    p.r8_disk_ops = 1_200.0;
+    p.r8_disk_bytes = 3.0e9;
+    p.r8_base_cpi = 1.1; // no longer stall-bound on the I/O driver path
+    // Region 11: loop blocking + data rearrangement — working set per
+    // block now fits L2; bookkeeping adds ~8% instructions (this is why
+    // the paper's re-analysis blames instruction count afterwards).
+    p.r11_mem = MemProfile::new(768.0 * 1024.0, 0.85).with_refs(0.05);
+    p.r11_instr *= 1.08;
+    p
+}
+
+/// ST: both fixes (paper: +170 % total).
+pub fn st_fix_both(params: &StParams) -> StParams {
+    st_fix_disparity(&st_fix_dissimilarity(params))
+}
+
+/// NPAR1WAY: common-subexpression elimination (§6.2.2).
+pub fn npar_fix(params: &NparParams) -> NparParams {
+    let mut p = params.clone();
+    // Region 3: instructions −36.32 %; absolute memory refs preserved.
+    let keep3 = 1.0 - 0.3632;
+    p.r3_instr *= keep3;
+    p.r3_refs /= keep3;
+    // Region 12: instructions −16.93 %.
+    let keep12 = 1.0 - 0.1693;
+    p.r12_instr *= keep12;
+    p.r12_refs /= keep12;
+    p
+}
+
+/// MPIBZIP2: the paper failed to optimize it; so do we, explicitly.
+pub fn mpibzip2_fixes() -> Option<()> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::pipeline::{analyze, AnalysisConfig};
+    use crate::cluster::NativeBackend;
+    use crate::metrics::{region_series, Metric, MetricView};
+    use crate::regions::RegionId;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::npar1way::npar1way;
+    use crate::workloads::st::st_coarse;
+
+    fn run_wall(spec: &crate::workloads::spec::WorkloadSpec) -> f64 {
+        simulate(spec, 2011).run_wall()
+    }
+
+    #[test]
+    fn dissimilarity_fix_balances_st() {
+        let fixed = st_fix_dissimilarity(&StParams::default());
+        let trace = simulate(&st_coarse(&fixed), 2011);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert!(
+            !report.dissimilarity.exists(),
+            "dynamic dispatch balances the load: {:?}",
+            report.dissimilarity.clustering.clusters()
+        );
+    }
+
+    #[test]
+    fn disparity_fix_clears_region_8_but_not_11() {
+        let fixed = st_fix_disparity(&StParams::default());
+        let trace = simulate(&st_coarse(&fixed), 2011);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        // Paper: region 8 stops being a disparity bottleneck; region 11
+        // remains one (CRNM 0.41 -> 0.26) but its root cause becomes
+        // the instruction count.
+        assert!(
+            !report.disparity.ccrs.contains(&RegionId(8)),
+            "region 8 cleared: {:?}",
+            report.disparity.ccrs
+        );
+        assert!(
+            report.disparity.ccrs.contains(&RegionId(11)),
+            "region 11 remains: {:?}",
+            report.disparity.ccrs
+        );
+        let causes = report.disparity_causes.as_ref().unwrap();
+        let r11 = causes
+            .per_bottleneck
+            .iter()
+            .find(|(r, _)| *r == RegionId(11))
+            .unwrap();
+        assert!(
+            r11.1.contains(&"instructions retired"),
+            "cause shifts to instructions: {:?}",
+            r11.1
+        );
+        assert!(
+            !r11.1.contains(&"L2 cache miss rate"),
+            "L2 misses fixed: {:?}",
+            r11.1
+        );
+        // The optimized region 11's L2 miss rate collapses.
+        let t2 = simulate(&st_coarse(&fixed), 1);
+        assert!(t2.sample(0, RegionId(11)).l2_miss_rate() < 0.05);
+    }
+
+    #[test]
+    fn fig14_speedup_ordering() {
+        let base = StParams::default();
+        let t0 = run_wall(&st_coarse(&base));
+        let t_dis = run_wall(&st_coarse(&st_fix_dissimilarity(&base)));
+        let t_dsp = run_wall(&st_coarse(&st_fix_disparity(&base)));
+        let t_both = run_wall(&st_coarse(&st_fix_both(&base)));
+        let s_dis = t0 / t_dis - 1.0;
+        let s_dsp = t0 / t_dsp - 1.0;
+        let s_both = t0 / t_both - 1.0;
+        // Paper: +40 % (dissimilarity), +90 % (disparity), +170 % (both).
+        assert!(s_dis > 0.10, "dissimilarity fix speeds up: {s_dis}");
+        assert!(s_dsp > s_dis, "disparity fix is the bigger win: {s_dsp} vs {s_dis}");
+        assert!(s_both > s_dsp, "both is best: {s_both}");
+    }
+
+    #[test]
+    fn npar_fix_matches_section_622() {
+        let base = NparParams::default();
+        let t0 = simulate(&npar1way(&base), 7);
+        let t1 = simulate(&npar1way(&npar_fix(&base)), 7);
+        let instr = |t: &crate::trace::Trace, r: usize| {
+            region_series(t, RegionId(r), MetricView::Plain(Metric::Instructions))[0]
+        };
+        let wall = |t: &crate::trace::Trace, r: usize| {
+            region_series(t, RegionId(r), MetricView::Plain(Metric::WallClock))[0]
+        };
+        let di3 = 1.0 - instr(&t1, 3) / instr(&t0, 3);
+        let dw3 = 1.0 - wall(&t1, 3) / wall(&t0, 3);
+        let di12 = 1.0 - instr(&t1, 12) / instr(&t0, 12);
+        let dw12 = 1.0 - wall(&t1, 12) / wall(&t0, 12);
+        // Paper: instr −36.32 %/−16.93 %; wall −20.33 %/−8.46 %.
+        assert!((di3 - 0.3632).abs() < 0.02, "instr3 {di3}");
+        assert!((di12 - 0.1693).abs() < 0.02, "instr12 {di12}");
+        assert!(dw3 > 0.10 && dw3 < di3, "wall3 {dw3} below instr cut");
+        assert!(dw12 > 0.03 && dw12 < di12, "wall12 {dw12} below instr cut");
+        // Overall ≈ +20 % (paper).
+        let speedup = t0.run_wall() / t1.run_wall() - 1.0;
+        assert!(speedup > 0.05, "overall {speedup}");
+    }
+
+    #[test]
+    fn mpibzip2_has_no_fix() {
+        assert!(mpibzip2_fixes().is_none());
+    }
+}

@@ -1,0 +1,121 @@
+//! ST with fine-grain code regions (paper §6.1.2, Fig. 15).
+//!
+//! Second round of the two-round analysis: the coarse regions that came
+//! out as possible bottlenecks are split into loop-level regions.
+//! Regions 1..14 keep their Fig. 8 ids; the refinement adds:
+//!
+//!   15, 16 — the two halves of region 5's smoothing loops
+//!   17, 18 — the two halves of region 6's correction loops
+//!   19, 20 — region 8's record-read loop (19: the seek+read loop that
+//!             owns nearly all disk traffic) and header decode (20)
+//!   21     — the hot inner loop of region 11 (ramod3), which carries
+//!             the entire shot-cost skew
+//!
+//! Expected outcome (paper): dissimilarity CCR chain 14 → 11 → 21 with
+//! CCCR = 21; new disparity bottlenecks 19 and 21, nested in the
+//! §6.1.1 bottlenecks 8 and 14. Shot count 300 (runtime ≈ 9815 s in
+//! the paper's testbed).
+
+use crate::simulator::cache::MemProfile;
+use crate::workloads::spec::{RegionSpec, WorkloadSpec, Work};
+use crate::workloads::st::{st_coarse, StParams, SHOTS_FINE};
+
+/// The 21-region fine-grain ST (Fig. 15).
+pub fn st_fine(params: &StParams) -> WorkloadSpec {
+    let mut params = params.clone();
+    params.shots = SHOTS_FINE;
+    let mut w = st_coarse(&params);
+    w.name = "ST-fine".to_string();
+    w.meta("grain", "fine");
+
+    // --- split region 5 into 15 + 16 (balanced halves) ---
+    let r5 = w.by_id(5).unwrap().work.clone();
+    let mut half_a = r5.clone();
+    half_a.instr_per_unit *= 0.55;
+    let mut half_b = r5.clone();
+    half_b.instr_per_unit *= 0.45;
+    w.region(RegionSpec::new(15, "smooth_pass1", 5, half_a));
+    w.region(RegionSpec::new(16, "smooth_pass2", 5, half_b));
+    w.by_id_mut(5).unwrap().work = Work::default(); // parent = sum of halves
+
+    // --- split region 6 into 17 + 18 ---
+    let r6 = w.by_id(6).unwrap().work.clone();
+    let mut corr_a = r6.clone();
+    corr_a.instr_per_unit *= 0.6;
+    let mut corr_b = r6.clone();
+    corr_b.instr_per_unit *= 0.4;
+    w.region(RegionSpec::new(17, "correct_pass1", 6, corr_a));
+    w.region(RegionSpec::new(18, "correct_pass2", 6, corr_b));
+    w.by_id_mut(6).unwrap().work = Work::default();
+
+    // --- split region 8: 19 owns the record reads (the true disparity
+    // bottleneck), 20 decodes headers ---
+    let r8 = w.by_id(8).unwrap().work.clone();
+    let read_loop = Work {
+        instr_per_unit: r8.instr_per_unit * 0.85,
+        base_cpi: r8.base_cpi,
+        ..Work::default()
+    }
+    .with_disk(r8.disk_bytes_per_unit * 0.97, r8.disk_ops_per_unit * 0.97);
+    let decode = Work {
+        instr_per_unit: r8.instr_per_unit * 0.15,
+        base_cpi: 1.0,
+        ..Work::default()
+    }
+    .with_disk(r8.disk_bytes_per_unit * 0.03, r8.disk_ops_per_unit * 0.03);
+    w.region(RegionSpec::new(19, "record_read_loop", 8, read_loop));
+    w.region(RegionSpec::new(20, "header_decode", 8, decode));
+    w.by_id_mut(8).unwrap().work = Work::default();
+
+    // --- split region 11: 21 is the skew-carrying hot loop ---
+    let r11 = w.by_id(11).unwrap().work.clone();
+    let hot = Work {
+        instr_per_unit: r11.instr_per_unit * 0.92,
+        base_cpi: r11.base_cpi,
+        mem: r11.mem,
+        rank_skew: r11.rank_skew.clone(),
+        ..Work::default()
+    };
+    w.region(RegionSpec::new(21, "ramod3_inner_loop", 11, hot));
+    // Region 11 keeps a balanced glue remainder.
+    w.by_id_mut(11).unwrap().work = Work {
+        instr_per_unit: r11.instr_per_unit * 0.08,
+        base_cpi: r11.base_cpi,
+        mem: Some(MemProfile::new(256.0 * 1024.0, 0.8).with_refs(0.05)),
+        ..Work::default()
+    };
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regions::RegionId;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::st::StParams;
+
+    #[test]
+    fn fig15_structure() {
+        let w = st_fine(&StParams::default());
+        assert_eq!(w.regions.len(), 21);
+        assert_eq!(w.children_of(5), vec![15, 16]);
+        assert_eq!(w.children_of(8), vec![19, 20]);
+        assert_eq!(w.children_of(11), vec![21]);
+        assert_eq!(w.children_of(14), vec![11, 12]);
+        let t = simulate(&w, 1);
+        assert_eq!(t.tree.depth(RegionId(21)), 3, "21 under 11 under 14");
+    }
+
+    #[test]
+    fn skew_now_lives_in_21() {
+        let t = simulate(&st_fine(&StParams::default()), 5);
+        let cpus: Vec<f64> = (0..8).map(|p| t.sample(p, RegionId(21)).cpu).collect();
+        let min = cpus.iter().cloned().fold(f64::MAX, f64::min);
+        let max = cpus.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max / min > 2.5, "21 skewed: {cpus:?}");
+        // 19 owns region 8's disk traffic.
+        let d19 = t.sample(0, RegionId(19)).disk_bytes;
+        let d8 = t.sample(0, RegionId(8)).disk_bytes;
+        assert!(d19 / d8 > 0.9, "19 carries the disk: {d19} of {d8}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Synthetic SPMD workload generator with injectable bottlenecks.
+//!
+//! Used by the quickstart example, the property tests (known ground
+//! truth → assert the pipeline recovers it) and the coordinator
+//! benches (streams of analysis jobs). Each generated app is a flat or
+//! lightly nested region tree of "balanced" compute regions, into which
+//! archetypal bottlenecks are injected:
+//!
+//! - `Imbalance`  — per-rank instruction skew in one region
+//!                  (dissimilarity; root cause a5);
+//! - `DiskHog`    — heavy disk traffic (disparity; a3);
+//! - `NetHog`     — heavy MPI traffic (disparity; a4);
+//! - `CacheThrash`— >L2 working set (disparity; a2, and a1 en route);
+//! - `InstrHog`   — plain oversized compute (disparity; a5).
+
+use crate::simulator::cache::MemProfile;
+use crate::simulator::machine::Machine;
+use crate::util::rng::Rng;
+use crate::workloads::spec::{RegionSpec, WorkloadSpec, Work};
+
+/// Bottleneck archetypes to inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inject {
+    Imbalance,
+    DiskHog,
+    NetHog,
+    CacheThrash,
+    InstrHog,
+}
+
+impl Inject {
+    pub fn all() -> [Inject; 5] {
+        [
+            Inject::Imbalance,
+            Inject::DiskHog,
+            Inject::NetHog,
+            Inject::CacheThrash,
+            Inject::InstrHog,
+        ]
+    }
+
+    /// Which rough-set attributes (a1..a5 indices) legitimately name
+    /// this archetype's root cause. A cache thrasher raises both L1 and
+    /// L2 miss rates, and either is a valid minimal reduct.
+    pub fn expected_causes(&self) -> &'static [usize] {
+        match self {
+            Inject::Imbalance => &[4],      // instructions retired
+            Inject::DiskHog => &[2],        // disk I/O quantity
+            Inject::NetHog => &[3],         // network I/O quantity
+            Inject::CacheThrash => &[0, 1], // L1 or L2 miss rate
+            Inject::InstrHog => &[4],       // instructions retired
+        }
+    }
+}
+
+/// Build a synthetic app: `nregions` flat regions, `nprocs` processes,
+/// with `injections` = (region id, archetype) pairs. Region ids are
+/// 1..=nregions; injected regions must be within range.
+pub fn synthetic(
+    nprocs: usize,
+    nregions: usize,
+    injections: &[(usize, Inject)],
+    seed: u64,
+) -> WorkloadSpec {
+    assert!(nregions >= 2 && nprocs >= 2);
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    let mut w = WorkloadSpec::new(
+        &format!("synthetic-{seed}"),
+        nprocs,
+        Machine::testbed_b(),
+    );
+    w.total_units = 1024.0;
+    w.phases = 4;
+    w.meta("generator", "synthetic");
+
+    for id in 1..=nregions {
+        // Balanced background region: modest, spread instruction counts
+        // so severity bands have a structured bottom.
+        let base_instr = 2e9 * rng.range_f64(0.5, 3.0);
+        let mut work = Work::compute(
+            base_instr / w.total_units * nprocs as f64,
+            rng.range_f64(0.6, 1.0),
+            MemProfile::new(rng.range_f64(8e3, 6e4), 0.85).with_refs(0.1),
+        );
+        for (inj_region, inj) in injections {
+            if *inj_region != id {
+                continue;
+            }
+            match inj {
+                Inject::Imbalance => {
+                    // Heavy region with a two-group rank skew.
+                    work.instr_per_unit *= 400.0;
+                    let skew: Vec<f64> = (0..nprocs)
+                        .map(|p| if p < nprocs / 2 { 0.7 } else { 1.3 })
+                        .collect();
+                    work.rank_skew = Some(skew);
+                }
+                Inject::DiskHog => {
+                    work = work.with_disk(4e10 / w.total_units * nprocs as f64, 4.0);
+                    work.instr_per_unit *= 40.0;
+                }
+                Inject::NetHog => {
+                    work = work.with_net(2.5e10 / w.total_units * nprocs as f64, 1.0);
+                    work.instr_per_unit *= 40.0;
+                }
+                Inject::CacheThrash => {
+                    work.instr_per_unit *= 300.0;
+                    work.mem =
+                        Some(MemProfile::new(64e6, 0.25).with_refs(0.12));
+                }
+                Inject::InstrHog => {
+                    work.instr_per_unit *= 600.0;
+                }
+            }
+        }
+        w.region(RegionSpec::new(id, &format!("region_{id}"), 0, work));
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::pipeline::{analyze, AnalysisConfig};
+    use crate::analysis::rootcause::attr_meaning;
+    use crate::cluster::NativeBackend;
+    use crate::regions::RegionId;
+    use crate::simulator::engine::simulate;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn clean_app_has_no_bottlenecks() {
+        let w = synthetic(4, 8, &[], 7);
+        let t = simulate(&w, 7);
+        let r = analyze(&t, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert!(!r.dissimilarity.exists(), "{:?}", r.dissimilarity.clustering);
+    }
+
+    #[test]
+    fn imbalance_is_located() {
+        let w = synthetic(4, 8, &[(5, Inject::Imbalance)], 9);
+        let t = simulate(&w, 9);
+        let r = analyze(&t, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert!(r.dissimilarity.exists());
+        assert!(
+            r.dissimilarity.cccrs.contains(&RegionId(5)),
+            "CCCR {:?}",
+            r.dissimilarity.cccrs
+        );
+    }
+
+    #[test]
+    fn each_archetype_yields_its_cause() {
+        forall(
+            "injected archetype recovered with expected root cause",
+            |rng| {
+                let inj = *rng.choose(&Inject::all());
+                let nregions = rng.range(6, 12);
+                let region = rng.range(2, nregions);
+                let seed = rng.next_u64() & 0xFFFF;
+                (inj, nregions, region, seed)
+            },
+            |&(inj, nregions, region, seed)| {
+                let w = synthetic(4, nregions, &[(region, inj)], seed);
+                let t = simulate(&w, seed);
+                let r = analyze(&t, &NativeBackend, &AnalysisConfig::default())
+                    .map_err(|e| e.to_string())?;
+                match inj {
+                    Inject::Imbalance => {
+                        if !r.dissimilarity.exists() {
+                            return Err("imbalance not detected".into());
+                        }
+                        if !r.dissimilarity.ccrs.contains(&RegionId(region)) {
+                            return Err(format!(
+                                "region {region} not in CCRs {:?}",
+                                r.dissimilarity.ccrs
+                            ));
+                        }
+                        let rc = r.dissimilarity_causes.as_ref().unwrap();
+                        let wants: Vec<&str> =
+                            inj.expected_causes().iter().map(|&a| attr_meaning(a)).collect();
+                        if !wants.iter().any(|w| rc.cause_names().contains(w)) {
+                            return Err(format!(
+                                "want one of {wants:?}, got {:?}",
+                                rc.cause_names()
+                            ));
+                        }
+                    }
+                    _ => {
+                        if !r.disparity.ccrs.contains(&RegionId(region)) {
+                            return Err(format!(
+                                "region {region} not in disparity CCRs {:?}",
+                                r.disparity.ccrs
+                            ));
+                        }
+                        let rc = r.disparity_causes.as_ref().unwrap();
+                        let wants: Vec<&str> =
+                            inj.expected_causes().iter().map(|&a| attr_meaning(a)).collect();
+                        let hit = rc
+                            .per_bottleneck
+                            .iter()
+                            .find(|(rr, _)| *rr == RegionId(region))
+                            .map(|(_, causes)| wants.iter().any(|w| causes.contains(w)))
+                            .unwrap_or(false);
+                        if !hit {
+                            return Err(format!(
+                                "want one of {wants:?}, got {:?}",
+                                rc.per_bottleneck
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration: the PJRT backend (JAX/Pallas AOT artifacts through the
+//! XLA runtime) must agree with the native rust implementation — same
+//! distance matrices (to f32 tolerance), same k-means severities, and
+//! bit-identical analysis conclusions on every paper workload.
+//!
+//! Requires `make artifacts`; the tests are skipped (with a note) when
+//! the artifact directory is missing so `cargo test` stays green on a
+//! fresh checkout.
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend, PjrtBackend};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::util::matrix::Matrix;
+use autoanalyzer::util::rng::Rng;
+use autoanalyzer::workloads::npar1way::{npar1way, NparParams};
+use autoanalyzer::workloads::st::{st_coarse, StParams};
+use autoanalyzer::workloads::st_fine::st_fine;
+use autoanalyzer::workloads::{mpibzip2, synthetic};
+
+fn pjrt() -> Option<PjrtBackend> {
+    match PjrtBackend::load("artifacts") {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP: PJRT artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn distance_matrices_agree() {
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(11);
+    for (m, n) in [(2usize, 3usize), (8, 14), (8, 21), (16, 12), (31, 33), (64, 128)] {
+        let rows: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..n).map(|_| rng.range_f64(0.0, 2000.0) as f32).collect())
+            .collect();
+        let x = Matrix::from_rows(&rows);
+        let a = native.pairwise_dists(&x).unwrap();
+        let b = pjrt.pairwise_dists(&x).unwrap();
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let scale = rows
+            .iter()
+            .flatten()
+            .cloned()
+            .fold(0.0f32, f32::max)
+            .max(1.0);
+        let diff = a.max_abs_diff(&b);
+        assert!(
+            diff <= 2e-3 * scale,
+            "({m}x{n}): max diff {diff} vs scale {scale}"
+        );
+    }
+}
+
+#[test]
+fn kmeans_severities_agree() {
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(13);
+    for r in [3usize, 14, 16, 21, 100, 256] {
+        let pts: Vec<f32> = (0..r).map(|_| rng.range_f64(0.0, 1.0) as f32).collect();
+        let a = native.severity_kmeans(&pts).unwrap();
+        let b = pjrt.severity_kmeans(&pts).unwrap();
+        assert_eq!(a.severities, b.severities, "r={r}");
+        for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+            assert!((ca - cb).abs() < 1e-4, "r={r}: centroids {ca} vs {cb}");
+        }
+    }
+}
+
+#[test]
+fn optics_clusterings_agree() {
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(17);
+    for case in 0..10 {
+        let m = rng.range(2, 24);
+        let n = rng.range(2, 30);
+        let groups = rng.range(1, 4);
+        let (rows, _) = autoanalyzer::util::prop::gen::grouped_matrix(&mut rng, m, n, groups);
+        let x = Matrix::from_rows(&rows);
+        let a = native.simplified_optics(&x).unwrap();
+        let b = pjrt.simplified_optics(&x).unwrap();
+        assert_eq!(a, b, "case {case} ({m}x{n})");
+    }
+}
+
+#[test]
+fn paper_workloads_same_conclusions() {
+    let Some(pjrt) = pjrt() else { return };
+    let native = NativeBackend;
+    let config = AnalysisConfig::default();
+    let traces = vec![
+        simulate(&st_coarse(&StParams::default()), 2011),
+        simulate(&st_fine(&StParams::default()), 2011),
+        simulate(&npar1way(&NparParams::default()), 2011),
+        simulate(&mpibzip2::mpibzip2(), 2011),
+        simulate(
+            &synthetic::synthetic(8, 12, &[(3, synthetic::Inject::Imbalance)], 5),
+            5,
+        ),
+    ];
+    for trace in traces {
+        let a = analyze(&trace, &native, &config).unwrap();
+        let b = analyze(&trace, &pjrt, &config).unwrap();
+        let name = trace.tree.program().to_string();
+        assert_eq!(
+            a.dissimilarity.clustering.clusters(),
+            b.dissimilarity.clustering.clusters(),
+            "{name}: similarity clusters"
+        );
+        assert_eq!(a.dissimilarity.ccrs, b.dissimilarity.ccrs, "{name}: CCRs");
+        assert_eq!(a.dissimilarity.cccrs, b.dissimilarity.cccrs, "{name}: CCCRs");
+        assert_eq!(a.disparity.ccrs, b.disparity.ccrs, "{name}: disparity CCRs");
+        assert_eq!(a.disparity.cccrs, b.disparity.cccrs, "{name}: disparity CCCRs");
+        assert_eq!(
+            a.disparity.kmeans.severities, b.disparity.kmeans.severities,
+            "{name}: severity bands"
+        );
+        let causes = |r: &autoanalyzer::analysis::pipeline::AnalysisReport| {
+            (
+                r.dissimilarity_causes.as_ref().map(|c| c.reducts.clone()),
+                r.disparity_causes.as_ref().map(|c| c.reducts.clone()),
+            )
+        };
+        assert_eq!(causes(&a), causes(&b), "{name}: rough-set reducts");
+    }
+}
+
+#[test]
+fn runtime_stats_track_executions() {
+    let Some(pjrt) = pjrt() else { return };
+    let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+    let before = pjrt.runtime().stats.snapshot();
+    pjrt.pairwise_dists(&x).unwrap();
+    pjrt.pairwise_dists(&x).unwrap();
+    let after = pjrt.runtime().stats.snapshot();
+    assert_eq!(after.1 - before.1, 2, "two executions recorded");
+    // Executable compiled once, cached for the second call.
+    assert!(after.0 - before.0 <= 1, "compile cache hit");
+}
+
+#[test]
+fn bucket_padding_is_identity() {
+    // DESIGN.md §7: pad/unpad identity — the same logical input run at
+    // different bucket sizes (forced by growing the input) returns the
+    // same top-left submatrix.
+    let Some(pjrt) = pjrt() else { return };
+    let mut rng = Rng::new(23);
+    let base_rows: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..10).map(|_| rng.range_f64(0.0, 100.0) as f32).collect())
+        .collect();
+    let small = Matrix::from_rows(&base_rows);
+    let d_small = pjrt.pairwise_dists(&small).unwrap();
+    // Embed the same rows into a larger matrix whose extra columns are
+    // zero (zero columns contribute nothing to pair distances).
+    let wide_rows: Vec<Vec<f32>> = base_rows
+        .iter()
+        .map(|r| {
+            let mut w = r.clone();
+            w.resize(120, 0.0); // forces the n=128 bucket
+            w
+        })
+        .collect();
+    let wide = Matrix::from_rows(&wide_rows);
+    let d_wide = pjrt.pairwise_dists(&wide).unwrap();
+    assert!(
+        d_small.max_abs_diff(&d_wide) < 1e-2,
+        "bucket choice must not change distances: {}",
+        d_small.max_abs_diff(&d_wide)
+    );
+}
+
+#[test]
+fn oversized_inputs_fail_loudly() {
+    // Inputs beyond the largest bucket must be a clean error, not a
+    // wrong answer.
+    let Some(pjrt) = pjrt() else { return };
+    let (max_m, _) = pjrt.runtime().max_pairwise_bucket();
+    let rows: Vec<Vec<f32>> = (0..max_m + 1).map(|_| vec![1.0, 2.0]).collect();
+    let too_big = Matrix::from_rows(&rows);
+    let err = pjrt.pairwise_dists(&too_big);
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.unwrap_err()).contains("bucket"));
+}

@@ -1,0 +1,139 @@
+//! Integration: the `autoanalyzer` binary end-to-end (argument parsing,
+//! subcommand dispatch, file I/O) via CARGO_BIN_EXE.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_autoanalyzer"))
+}
+
+#[test]
+fn usage_on_no_args() {
+    let out = bin().output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("reproduce"));
+}
+
+#[test]
+fn list_shows_workloads_and_experiments() {
+    let out = bin().arg("list").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mpibzip2"));
+    assert!(text.contains("fig20_23"));
+}
+
+#[test]
+fn analyze_st_reports_the_paper_findings() {
+    let out = bin()
+        .args(["analyze", "--workload", "st", "--backend", "native"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("there are 5 clusters"));
+    assert!(text.contains("CCCR: code region 11"));
+    assert!(text.contains("root causes: L2 cache miss rate, disk I/O quantity"));
+}
+
+#[test]
+fn simulate_then_analyze_trace_round_trip() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("npar.json");
+    let out = bin()
+        .args([
+            "simulate",
+            "--workload",
+            "npar1way",
+            "--out",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["analyze-trace", path.to_str().unwrap(), "--backend", "native"])
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("NPAR1WAY"));
+    assert!(text.contains("network I/O quantity, instructions retired"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn simulate_xml_round_trips_through_analyze_trace() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bzip.xml");
+    assert!(bin()
+        .args([
+            "simulate",
+            "--workload",
+            "mpibzip2",
+            "--format",
+            "xml",
+            "--out",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap()
+        .status
+        .success());
+    let out = bin()
+        .args(["analyze-trace", path.to_str().unwrap(), "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("MPIBZIP2"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn reproduce_single_experiment() {
+    let out = bin()
+        .args(["reproduce", "--experiment", "fig12", "--backend", "native"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("very high: code regions: 11,14"));
+    assert!(text.contains("0 failures"));
+}
+
+#[test]
+fn unknown_workload_fails_cleanly() {
+    let out = bin()
+        .args(["analyze", "--workload", "doom"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown workload"));
+}
+
+#[test]
+fn variant_flag_applies_optimizations() {
+    let out = bin()
+        .args([
+            "analyze",
+            "--workload",
+            "st",
+            "--variant",
+            "fix-both",
+            "--backend",
+            "native",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("there are 1 clusters"),
+        "dynamic dispatch balances the load"
+    );
+}

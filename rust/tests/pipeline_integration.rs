@@ -1,0 +1,139 @@
+//! Integration: pipeline behaviour across module boundaries — trace
+//! codec round trips feeding the analysis, golden outcomes per paper
+//! workload, determinism, and failure injection (malformed traces).
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::regions::RegionId;
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::{json_codec, xml_codec};
+use autoanalyzer::util::json::Json;
+use autoanalyzer::workloads::npar1way::{npar1way, NparParams};
+use autoanalyzer::workloads::st::{st_coarse, StParams};
+use autoanalyzer::workloads::{mpibzip2, synthetic};
+
+fn ids(v: &[RegionId]) -> Vec<usize> {
+    v.iter().map(|r| r.0).collect()
+}
+
+#[test]
+fn st_golden_outcomes() {
+    let trace = simulate(&st_coarse(&StParams::default()), 2011);
+    let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+    assert_eq!(r.dissimilarity.clustering.num_clusters(), 5);
+    assert_eq!(ids(&r.dissimilarity.cccrs), vec![11]);
+    assert_eq!(ids(&r.disparity.ccrs), vec![8, 11, 14]);
+    assert_eq!(ids(&r.disparity.cccrs), vec![8, 11]);
+    assert_eq!(
+        r.dissimilarity_causes.unwrap().cause_names(),
+        vec!["instructions retired"]
+    );
+    assert_eq!(
+        r.disparity_causes.unwrap().cause_names(),
+        vec!["L2 cache miss rate", "disk I/O quantity"]
+    );
+}
+
+#[test]
+fn analysis_survives_json_round_trip() {
+    let trace = simulate(&st_coarse(&StParams::default()), 2011);
+    let text = json_codec::to_json(&trace).pretty();
+    let reloaded = json_codec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let a = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+    let b = analyze(&reloaded, &NativeBackend, &AnalysisConfig::default()).unwrap();
+    assert_eq!(a.dissimilarity.cccrs, b.dissimilarity.cccrs);
+    assert_eq!(a.disparity.ccrs, b.disparity.ccrs);
+    assert_eq!(
+        a.disparity.kmeans.severities,
+        b.disparity.kmeans.severities
+    );
+}
+
+#[test]
+fn analysis_survives_xml_round_trip() {
+    let trace = simulate(&npar1way(&NparParams::default()), 2011);
+    let xml = xml_codec::to_xml(&trace);
+    let reloaded = xml_codec::from_xml(&xml).unwrap();
+    let a = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+    let b = analyze(&reloaded, &NativeBackend, &AnalysisConfig::default()).unwrap();
+    assert_eq!(a.disparity.cccrs, b.disparity.cccrs);
+    assert_eq!(
+        a.disparity_causes.unwrap().reducts,
+        b.disparity_causes.unwrap().reducts
+    );
+}
+
+#[test]
+fn determinism_across_runs() {
+    for seed in [1u64, 42, 2011] {
+        let a = analyze(
+            &simulate(&mpibzip2::mpibzip2(), seed),
+            &NativeBackend,
+            &AnalysisConfig::default(),
+        )
+        .unwrap();
+        let b = analyze(
+            &simulate(&mpibzip2::mpibzip2(), seed),
+            &NativeBackend,
+            &AnalysisConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(a.disparity.ccrs, b.disparity.ccrs, "seed {seed}");
+        assert_eq!(
+            a.dissimilarity.clustering.clusters(),
+            b.dissimilarity.clustering.clusters()
+        );
+    }
+}
+
+#[test]
+fn seed_changes_noise_not_conclusions() {
+    // Measurement jitter must not flip the findings on the paper
+    // workloads (the paper ran real apps repeatedly with the same
+    // conclusions).
+    for seed in [7u64, 77, 777, 7777] {
+        let trace = simulate(&st_coarse(&StParams::default()), seed);
+        let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert_eq!(ids(&r.dissimilarity.cccrs), vec![11], "seed {seed}");
+        assert_eq!(ids(&r.disparity.ccrs), vec![8, 11, 14], "seed {seed}");
+    }
+}
+
+#[test]
+fn malformed_traces_rejected() {
+    // Truncated JSON.
+    assert!(Json::parse("{\"format\": \"autoanalyzer-trace-v1\"").is_err());
+    // Wrong format marker.
+    let j = Json::parse("{\"format\": \"not-a-trace\"}").unwrap();
+    assert!(json_codec::from_json(&j).is_err());
+    // Sample row with the wrong arity comes from a mutated real trace.
+    let trace = simulate(
+        &synthetic::synthetic(2, 3, &[], 1),
+        1,
+    );
+    let mut text = json_codec::to_json(&trace).pretty();
+    // Replace the first per-region sample array with a 3-field one.
+    let idx = text.find("\"samples\"").unwrap();
+    let outer = text[idx..].find('[').unwrap() + idx;
+    let inner = text[outer + 1..].find('[').unwrap() + outer + 1;
+    let close = text[inner..].find(']').unwrap() + inner;
+    text.replace_range(inner..=close, "[1,2,3]");
+    let j = Json::parse(&text).unwrap();
+    assert!(json_codec::from_json(&j).is_err());
+    // Broken XML.
+    assert!(xml_codec::from_xml("<trace program=\"x\"><sample region=").is_err());
+}
+
+#[test]
+fn trace_files_round_trip_via_cli_paths() {
+    // Exercise the save/load helpers main.rs uses.
+    let dir = std::env::temp_dir().join("autoanalyzer-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let trace = simulate(&synthetic::synthetic(4, 6, &[], 3), 3);
+    json_codec::save(&trace, &path).unwrap();
+    let loaded = json_codec::load(&path).unwrap();
+    assert_eq!(loaded.nprocs(), 4);
+    assert_eq!(loaded.nregions(), 6);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,255 @@
+//! Cross-module property tests (DESIGN.md §7): invariants the paper's
+//! algorithms must satisfy on arbitrary inputs, via the in-tree
+//! property harness (`PROP_SEED`/`PROP_CASE` reproduce failures).
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::optics::simplified_optics;
+use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::metrics::{perf_matrix, Metric, MetricView};
+use autoanalyzer::regions::RegionId;
+use autoanalyzer::search::dissimilarity_search;
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::util::matrix::Matrix;
+use autoanalyzer::util::prop::{forall, gen};
+use autoanalyzer::util::rng::Rng;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+/// Random traces (with or without injected bottlenecks) never panic the
+/// pipeline and always produce structurally sound results.
+#[test]
+fn pipeline_total_on_random_workloads() {
+    forall(
+        "pipeline is total + structurally sound",
+        |rng: &mut Rng| {
+            let nprocs = rng.range(2, 12);
+            let nregions = rng.range(2, 16);
+            let mut injections = Vec::new();
+            for _ in 0..rng.below(3) {
+                injections.push((
+                    rng.range(1, nregions),
+                    *rng.choose(&Inject::all()),
+                ));
+            }
+            let seed = rng.next_u64() & 0xFFFFF;
+            (nprocs, nregions, injections, seed)
+        },
+        |(nprocs, nregions, injections, seed)| {
+            let spec = synthetic(*nprocs, *nregions, injections, *seed);
+            let trace = simulate(&spec, *seed);
+            let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default())
+                .map_err(|e| e.to_string())?;
+            // CCCRs ⊆ CCRs (dissimilarity).
+            for c in &r.dissimilarity.cccrs {
+                if !r.dissimilarity.ccrs.contains(c) {
+                    return Err(format!("CCCR {c} not in CCR set"));
+                }
+            }
+            // A dissimilarity CCCR has no CCR children.
+            for c in &r.dissimilarity.cccrs {
+                for child in trace.tree.children(*c) {
+                    if r.dissimilarity.ccrs.contains(child) {
+                        return Err(format!("CCCR {c} has CCR child {child}"));
+                    }
+                }
+            }
+            // Disparity CCCRs are leaves or dominate their children.
+            for c in &r.disparity.cccrs {
+                if !trace.tree.is_leaf(*c) {
+                    let sev = r.disparity.severity(*c);
+                    for child in trace.tree.children(*c) {
+                        if r.disparity.severity(*child) >= sev {
+                            return Err(format!("CCCR {c} dominated by child {child}"));
+                        }
+                    }
+                }
+            }
+            // Every process sits in exactly one cluster.
+            let total: usize = r
+                .dissimilarity
+                .clustering
+                .clusters()
+                .iter()
+                .map(Vec::len)
+                .sum();
+            if total != trace.nprocs() {
+                return Err(format!("partition covers {total} of {}", trace.nprocs()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Algorithm 2 must leave the performance data untouched (zero-out /
+/// restore is an in-place protocol) and be idempotent.
+#[test]
+fn algorithm2_restores_data_and_is_idempotent() {
+    forall(
+        "Algorithm 2 leaves data intact",
+        |rng: &mut Rng| {
+            let nregions = rng.range(3, 12);
+            let region = rng.range(1, nregions);
+            let seed = rng.next_u64() & 0xFFFF;
+            (nregions, region, seed)
+        },
+        |&(nregions, region, seed)| {
+            let spec = synthetic(6, nregions, &[(region, Inject::Imbalance)], seed);
+            let trace = simulate(&spec, seed);
+            let view = MetricView::Plain(Metric::CpuClock);
+            let before = perf_matrix(&trace, view);
+            let a = dissimilarity_search(&trace, &NativeBackend, view)
+                .map_err(|e| e.to_string())?;
+            let after = perf_matrix(&trace, view);
+            if before.max_abs_diff(&after) != 0.0 {
+                return Err("trace mutated by the search".into());
+            }
+            let b = dissimilarity_search(&trace, &NativeBackend, view)
+                .map_err(|e| e.to_string())?;
+            if a.ccrs != b.ccrs || a.cccrs != b.cccrs {
+                return Err("search not idempotent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// OPTICS is invariant to permuting the points (up to relabeling):
+/// the multiset of cluster sizes and the co-membership relation agree.
+#[test]
+fn optics_permutation_invariance() {
+    forall(
+        "OPTICS permutation invariance",
+        |rng: &mut Rng| {
+            let m = rng.range(2, 16);
+            let n = rng.range(1, 8);
+            let groups = rng.range(1, 4);
+            let (rows, _) = gen::grouped_matrix(rng, m, n, groups);
+            let mut perm: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut perm);
+            (rows, perm)
+        },
+        |(rows, perm)| {
+            let a = simplified_optics(&Matrix::from_rows(rows));
+            let permuted: Vec<Vec<f32>> =
+                perm.iter().map(|&i| rows[i].clone()).collect();
+            let b = simplified_optics(&Matrix::from_rows(&permuted));
+            let m = rows.len();
+            // Co-membership must be preserved under the permutation.
+            for i in 0..m {
+                for j in 0..m {
+                    let same_a = a.cluster_of(perm[i]) == a.cluster_of(perm[j]);
+                    let same_b = b.cluster_of(i) == b.cluster_of(j);
+                    if same_a != same_b {
+                        return Err(format!(
+                            "pair ({}, {}) co-membership differs",
+                            perm[i], perm[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Scaling every vector by the same positive factor leaves the OPTICS
+/// clustering unchanged (the threshold is relative: 10% of the norm).
+#[test]
+fn optics_scale_invariance() {
+    forall(
+        "OPTICS scale invariance",
+        |rng: &mut Rng| {
+            let m = rng.range(2, 12);
+            let (rows, _) = gen::grouped_matrix(rng, m, 5, 2);
+            let scale = rng.range_f64(0.1, 100.0) as f32;
+            (rows, scale)
+        },
+        |(rows, scale)| {
+            let a = simplified_optics(&Matrix::from_rows(rows));
+            let scaled: Vec<Vec<f32>> = rows
+                .iter()
+                .map(|r| r.iter().map(|v| v * scale).collect())
+                .collect();
+            let b = simplified_optics(&Matrix::from_rows(&scaled));
+            if a.clusters() == b.clusters() {
+                Ok(())
+            } else {
+                Err(format!("{:?} vs {:?} at scale {scale}", a.clusters(), b.clusters()))
+            }
+        },
+    );
+}
+
+/// Trace codecs: JSON and XML round trips preserve every sample for
+/// arbitrary simulated workloads.
+#[test]
+fn codecs_round_trip_random_traces() {
+    forall(
+        "codec round trips",
+        |rng: &mut Rng| {
+            let nprocs = rng.range(2, 8);
+            let nregions = rng.range(2, 10);
+            let seed = rng.next_u64() & 0xFFFF;
+            (nprocs, nregions, seed)
+        },
+        |&(nprocs, nregions, seed)| {
+            let trace = simulate(&synthetic(nprocs, nregions, &[], seed), seed);
+            let j = autoanalyzer::trace::json_codec::to_json(&trace);
+            let t2 = autoanalyzer::trace::json_codec::from_json(&j)
+                .map_err(|e| e.to_string())?;
+            let xml = autoanalyzer::trace::xml_codec::to_xml(&trace);
+            let t3 = autoanalyzer::trace::xml_codec::from_xml(&xml)
+                .map_err(|e| e.to_string())?;
+            for p in 0..trace.nprocs() {
+                for r in 0..=trace.nregions() {
+                    let a = trace.sample(p, RegionId(r));
+                    if a != t2.sample(p, RegionId(r)) {
+                        return Err(format!("json mismatch at ({p},{r})"));
+                    }
+                    if a != t3.sample(p, RegionId(r)) {
+                        return Err(format!("xml mismatch at ({p},{r})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The simulator conserves work: total instructions across processes
+/// are independent of the dispatch mode (static skew redistributes
+/// cost, dynamic balances it; the per-rank mean multiplier fixes the
+/// total) and the program wall equals the slowest rank.
+#[test]
+fn simulator_conservation_laws() {
+    forall(
+        "simulator conservation",
+        |rng: &mut Rng| (rng.range(2, 10), rng.range(2, 10), rng.next_u64() & 0xFFFF),
+        |&(nprocs, nregions, seed)| {
+            let spec = synthetic(nprocs, nregions, &[], seed);
+            let trace = simulate(&spec, seed);
+            // Root wall is the max over every process's own total and
+            // equal across processes (final barrier).
+            let walls: Vec<f64> = (0..nprocs).map(|p| trace.program_wall(p)).collect();
+            let max = walls.iter().cloned().fold(0.0, f64::max);
+            for (p, w) in walls.iter().enumerate() {
+                if (w - max).abs() > 1e-6 * max {
+                    return Err(format!("rank {p} wall {w} != {max}"));
+                }
+            }
+            // Root aggregates = sum of depth-1 regions per process.
+            for p in 0..nprocs {
+                let sum: f64 = trace
+                    .tree
+                    .at_depth(1)
+                    .iter()
+                    .map(|&r| trace.sample(p, r).instructions)
+                    .sum();
+                let root = trace.sample(p, RegionId(0)).instructions;
+                if (sum - root).abs() > 1e-6 * root.max(1.0) {
+                    return Err(format!("rank {p}: root {root} != sum {sum}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
