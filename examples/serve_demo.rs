@@ -78,6 +78,30 @@ fn main() -> anyhow::Result<()> {
          {found_disparity} with disparity bottlenecks"
     );
     coord.shutdown();
+
+    // Metrics dump: everything the obs layer collected while serving —
+    // per-stage pipeline timings (pipeline_stage_*_seconds) and the
+    // p50/p95/p99 job latency (coordinator_job_seconds quantiles).
+    println!("\n--- metrics (Prometheus text format) ---");
+    print!("{}", autoanalyzer::obs::render_prometheus());
+    let jobs_hist = autoanalyzer::obs::registry().histogram("coordinator_job_seconds");
+    println!(
+        "--- job latency from obs: count {} p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms ---",
+        jobs_hist.count(),
+        jobs_hist.percentile(50.0) * 1e3,
+        jobs_hist.percentile(95.0) * 1e3,
+        jobs_hist.percentile(99.0) * 1e3
+    );
+    anyhow::ensure!(
+        jobs_hist.count() == jobs,
+        "obs job histogram recorded {} of {jobs} jobs",
+        jobs_hist.count()
+    );
+    anyhow::ensure!(
+        autoanalyzer::obs::registry().active_spans() == 0,
+        "span leak after shutdown"
+    );
+
     // A quarter of the jobs carry an injected imbalance.
     anyhow::ensure!(found_imbalance >= jobs / 4, "missed imbalances");
     println!("serve_demo OK");

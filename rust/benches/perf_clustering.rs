@@ -59,5 +59,5 @@ fn main() {
         bench.run("optics 8x14 pjrt", || p.simplified_optics(&x).unwrap());
     }
 
-    println!("{}", bench.report());
+    println!("{}", bench.report_with_metrics());
 }

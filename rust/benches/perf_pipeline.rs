@@ -77,7 +77,7 @@ fn main() {
             .unwrap()
     });
 
-    println!("{}", bench.report());
+    println!("{}", bench.report_with_metrics());
 
     use autoanalyzer::cluster::ClusterBackend as _;
     let _ = backend.name();

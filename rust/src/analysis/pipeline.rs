@@ -15,6 +15,22 @@ use crate::metrics::{Metric, MetricView};
 use crate::search::{disparity_search, dissimilarity_search, DisparityResult, DissimilarityResult};
 use crate::trace::Trace;
 
+/// Wall-clock seconds spent in each pipeline stage of one `analyze`
+/// call (the same durations also land in the global `obs` histograms
+/// `pipeline_stage_*_seconds`, so a service aggregates across runs
+/// while each report keeps its own numbers).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimings {
+    /// Dissimilarity existence test + Algorithm 2 search.
+    pub dissimilarity_s: f64,
+    /// Disparity severity clustering + refinement.
+    pub disparity_s: f64,
+    /// Rough-set root-cause stage (both bottleneck kinds).
+    pub rootcause_s: f64,
+    /// Whole `analyze` call, including trace validation.
+    pub total_s: f64,
+}
+
 /// Everything AutoAnalyzer concluded about one run.
 #[derive(Debug)]
 pub struct AnalysisReport {
@@ -28,6 +44,9 @@ pub struct AnalysisReport {
     pub disparity_causes: Option<DisparityRootCause>,
     /// Which backend computed the clusterings ("native" | "pjrt").
     pub backend: &'static str,
+    /// Per-stage wall clock for this run (see `run_report()` for the
+    /// JSON form).
+    pub timings: StageTimings,
 }
 
 /// Metric choices for the two analyses (§6.4 studies alternatives).
@@ -58,11 +77,20 @@ pub fn analyze(
     backend: &dyn ClusterBackend,
     config: &AnalysisConfig,
 ) -> Result<AnalysisReport> {
+    let total = crate::obs_span!("pipeline_analyze_seconds");
+    crate::obs_counter!("pipeline_runs_total").inc();
     trace.validate().map_err(anyhow::Error::msg)?;
 
+    let span = crate::obs_span!("pipeline_stage_dissimilarity_seconds");
     let dissimilarity = dissimilarity_search(trace, backend, config.dissimilarity_view)?;
-    let disparity = disparity_search(trace, backend, config.disparity_view)?;
+    let dissimilarity_s = span.stop();
+    crate::obs_counter!("pipeline_reclusters_total").add(dissimilarity.reclusters as u64);
 
+    let span = crate::obs_span!("pipeline_stage_disparity_seconds");
+    let disparity = disparity_search(trace, backend, config.disparity_view)?;
+    let disparity_s = span.stop();
+
+    let span = crate::obs_span!("pipeline_stage_rootcause_seconds");
     let dissimilarity_causes = if config.root_causes && dissimilarity.exists() {
         Some(dissimilarity_root_cause(
             trace,
@@ -77,6 +105,10 @@ pub fn analyze(
     } else {
         None
     };
+    let rootcause_s = span.stop();
+    if dissimilarity.exists() || disparity.exists() {
+        crate::obs_counter!("pipeline_bottlenecks_found_total").inc();
+    }
 
     Ok(AnalysisReport {
         program: trace.tree.program().to_string(),
@@ -88,6 +120,12 @@ pub fn analyze(
         disparity,
         disparity_causes,
         backend: backend.name(),
+        timings: StageTimings {
+            dissimilarity_s,
+            disparity_s,
+            rootcause_s,
+            total_s: total.stop(),
+        },
     })
 }
 
@@ -107,5 +145,24 @@ mod tests {
         assert!(report.disparity.exists(), "ST has disparity bottlenecks");
         assert!(report.dissimilarity_causes.is_some());
         assert!(report.disparity_causes.is_some());
+    }
+
+    #[test]
+    fn analyze_populates_stage_timings_and_metrics() {
+        let runs_before = crate::obs_counter!("pipeline_runs_total").get();
+        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        let t = report.timings;
+        assert!(t.total_s > 0.0);
+        assert!(t.dissimilarity_s >= 0.0 && t.disparity_s >= 0.0 && t.rootcause_s >= 0.0);
+        assert!(
+            t.total_s >= t.dissimilarity_s,
+            "total {} < stage {}",
+            t.total_s,
+            t.dissimilarity_s
+        );
+        assert!(crate::obs_counter!("pipeline_runs_total").get() > runs_before);
+        let hist = crate::obs::registry().histogram("pipeline_stage_dissimilarity_seconds");
+        assert!(hist.count() > 0, "stage span must have recorded");
     }
 }

@@ -2,8 +2,18 @@
 //! decision tables and root causes, as one text document.
 
 use crate::analysis::pipeline::AnalysisReport;
+use crate::regions::RegionId;
 use crate::roughset::boolfn::set_to_names;
+use crate::util::json::Json;
 use crate::util::tables::{f4, Table};
+
+fn region_ids(v: &[RegionId]) -> Json {
+    Json::Arr(v.iter().map(|r| Json::Num(r.0 as f64)).collect())
+}
+
+fn names(v: &[&str]) -> Json {
+    Json::Arr(v.iter().map(|s| Json::Str(s.to_string())).collect())
+}
 
 impl AnalysisReport {
     /// Full human-readable report.
@@ -68,6 +78,57 @@ impl AnalysisReport {
         out
     }
 
+    /// Structured JSON run-report: findings plus the per-stage wall
+    /// clock of this run. This is the machine-readable sink next to
+    /// `render()`'s human one; the coordinator and serve_demo emit it
+    /// per job, and `obs::snapshot_json()` carries the process-wide
+    /// aggregates alongside.
+    pub fn run_report(&self) -> Json {
+        let dissim = Json::obj()
+            .push("exists", Json::Bool(self.dissimilarity.exists()))
+            .push(
+                "clusters",
+                Json::Num(self.dissimilarity.clustering.num_clusters() as f64),
+            )
+            .push("severity", Json::Num(self.dissimilarity.clustering.severity()))
+            .push("ccrs", region_ids(&self.dissimilarity.ccrs))
+            .push("cccrs", region_ids(&self.dissimilarity.cccrs))
+            .push("reclusters", Json::Num(self.dissimilarity.reclusters as f64))
+            .push(
+                "root_causes",
+                match &self.dissimilarity_causes {
+                    Some(rc) => names(&rc.cause_names()),
+                    None => Json::Null,
+                },
+            );
+        let disp = Json::obj()
+            .push("exists", Json::Bool(self.disparity.exists()))
+            .push("metric", Json::Str(self.disparity.metric.to_string()))
+            .push("ccrs", region_ids(&self.disparity.ccrs))
+            .push("cccrs", region_ids(&self.disparity.cccrs))
+            .push(
+                "root_causes",
+                match &self.disparity_causes {
+                    Some(rc) => names(&rc.cause_names()),
+                    None => Json::Null,
+                },
+            );
+        let timings = Json::obj()
+            .push("dissimilarity_s", Json::Num(self.timings.dissimilarity_s))
+            .push("disparity_s", Json::Num(self.timings.disparity_s))
+            .push("rootcause_s", Json::Num(self.timings.rootcause_s))
+            .push("total_s", Json::Num(self.timings.total_s));
+        Json::obj()
+            .push("program", Json::Str(self.program.clone()))
+            .push("nprocs", Json::Num(self.nprocs as f64))
+            .push("nregions", Json::Num(self.nregions as f64))
+            .push("run_wall_s", Json::Num(self.run_wall))
+            .push("backend", Json::Str(self.backend.to_string()))
+            .push("dissimilarity", dissim)
+            .push("disparity", disp)
+            .push("timings", timings)
+    }
+
     /// One-line summary (used by the coordinator's job log).
     pub fn summary(&self) -> String {
         format!(
@@ -102,5 +163,22 @@ mod tests {
         assert!(text.contains("root causes:"));
         let s = report.summary();
         assert!(s.contains("ST"));
+    }
+
+    #[test]
+    fn run_report_is_valid_json_with_findings_and_timings() {
+        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        let json = report.run_report();
+        let parsed = crate::util::json::Json::parse(&json.pretty()).unwrap();
+        assert_eq!(parsed.get("program").and_then(|v| v.as_str()), Some("ST"));
+        assert_eq!(parsed.get("nprocs").and_then(|v| v.as_usize()), Some(report.nprocs));
+        let dissim = parsed.get("dissimilarity").unwrap();
+        assert_eq!(dissim.get("exists").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(dissim.get("clusters").and_then(|v| v.as_usize()), Some(5));
+        assert!(dissim.get("root_causes").unwrap().as_arr().is_some());
+        let timings = parsed.get("timings").unwrap();
+        let total = timings.get("total_s").and_then(|v| v.as_f64()).unwrap();
+        assert!(total > 0.0);
     }
 }

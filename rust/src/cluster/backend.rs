@@ -36,10 +36,16 @@ pub struct NativeBackend;
 
 impl ClusterBackend for NativeBackend {
     fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        crate::obs_counter!("backend_native_dispatch_total").inc();
+        // Full m×m Euclidean matrix: every ordered pair costs one
+        // n-dimensional distance evaluation.
+        crate::obs_counter!("backend_distance_evals_total")
+            .add((x.rows() * x.rows()) as u64);
         Ok(crate::cluster::distance::pairwise_dists(x))
     }
 
     fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
+        crate::obs_counter!("backend_native_dispatch_total").inc();
         Ok(kmeans::severity_kmeans(points))
     }
 
@@ -76,10 +82,12 @@ impl PjrtBackend {
 
 impl ClusterBackend for PjrtBackend {
     fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        crate::obs_counter!("backend_pjrt_dispatch_total").inc();
         self.runtime.pairwise_dists(x)
     }
 
     fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
+        crate::obs_counter!("backend_pjrt_dispatch_total").inc();
         let init = kmeans::farthest_point_init(points);
         let out = self.runtime.kmeans5(points, &init)?;
         let mut res = kmeans::to_severities(&out.centroids, &out.assignments);
@@ -102,8 +110,8 @@ pub fn select_backend(name: &str, artifact_dir: &str) -> Result<Box<dyn ClusterB
         "auto" => match PjrtBackend::load(artifact_dir) {
             Ok(b) => Ok(Box::new(b)),
             Err(e) => {
-                eprintln!(
-                    "warning: PJRT artifacts unavailable ({e}); using native backend"
+                crate::log_warn!(
+                    "PJRT artifacts unavailable ({e}); using native backend"
                 );
                 Ok(Box::new(NativeBackend))
             }

@@ -134,6 +134,13 @@ pub fn linspace_init(points: &[f32]) -> Vec<f32> {
 /// `model.kmeans_cluster`, f32 arithmetic to match the artifact).
 pub fn kmeans_fixed(points: &[f32], init: &[f32], iters: usize) -> (Vec<f32>, Vec<u32>, f32) {
     let k = init.len();
+    crate::obs_counter!("kmeans_runs_total").inc();
+    crate::obs_counter!("kmeans_iterations_total").add(iters as u64);
+    // Every assignment pass evaluates point-to-centroid distance for
+    // all (point, centroid) pairs; the closing inertia pass adds one
+    // more sweep.
+    crate::obs_counter!("kmeans_distance_evals_total")
+        .add(((iters + 1) * points.len() * k) as u64);
     let mut cent = init.to_vec();
     let mut assign = vec![0u32; points.len()];
     for _ in 0..iters {

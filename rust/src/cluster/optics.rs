@@ -113,12 +113,17 @@ pub fn simplified_optics_from_parts(
     count_threshold: usize,
 ) -> Clustering {
     let m = norms.len();
+    crate::obs_counter!("optics_runs_total").inc();
     if m == 0 {
         return Clustering {
             clusters: Vec::new(),
             assignment: Vec::new(),
         };
     }
+    // Accumulated locally (one relaxed add at the end) so the hot loop
+    // carries no atomics; Algorithm 2 re-clusters per probe, so the
+    // lookup count tracks the search cost the paper's §5 reports.
+    let mut lookups: u64 = 0;
     let mut assigned = vec![false; m];
     let mut clusters: Vec<Vec<usize>> = Vec::new();
     for p in 0..m {
@@ -132,6 +137,7 @@ pub fn simplified_optics_from_parts(
                 count += 1;
             }
         }
+        lookups += (m - 1) as u64;
         if count >= count_threshold && count > 0 {
             let mut members = vec![p];
             assigned[p] = true;
@@ -141,12 +147,14 @@ pub fn simplified_optics_from_parts(
                     assigned[q] = true;
                 }
             }
+            lookups += (m - 1) as u64;
             clusters.push(members);
         } else {
             assigned[p] = true;
             clusters.push(vec![p]);
         }
     }
+    crate::obs_counter!("optics_distance_lookups_total").add(lookups);
     Clustering::canonicalize(clusters, m)
 }
 

@@ -97,15 +97,19 @@ impl Coordinator {
                         let backend = match factory() {
                             Ok(b) => b,
                             Err(e) => {
-                                eprintln!("worker {wid}: backend init failed: {e}");
+                                crate::obs_counter!("coordinator_worker_init_failures_total")
+                                    .inc();
+                                crate::log_error!("worker {wid}: backend init failed: {e}");
                                 return;
                             }
                         };
+                        crate::obs_gauge!("coordinator_workers").add(1);
                         loop {
                             let job = {
                                 let mut jobs = queue.jobs.lock().unwrap();
                                 loop {
                                     if let Some(job) = jobs.pop_front() {
+                                        crate::obs_gauge!("coordinator_queue_depth").sub(1);
                                         queue.not_full.notify_one();
                                         break Some(job);
                                     }
@@ -115,8 +119,13 @@ impl Coordinator {
                                     jobs = queue.not_empty.wait(jobs).unwrap();
                                 }
                             };
-                            let Some(job) = job else { return };
+                            let Some(job) = job else {
+                                crate::obs_gauge!("coordinator_workers").sub(1);
+                                return;
+                            };
                             let start = Instant::now();
+                            crate::obs_gauge!("coordinator_workers_busy").add(1);
+                            let span = crate::obs_span!("coordinator_job_seconds");
                             let outcome = match analyze(&job.trace, backend.as_ref(), &job.config)
                             {
                                 Ok(report) => JobOutcome {
@@ -129,6 +138,7 @@ impl Coordinator {
                                 },
                                 Err(e) => {
                                     stats.failed.fetch_add(1, Ordering::Relaxed);
+                                    crate::obs_counter!("coordinator_jobs_failed_total").inc();
                                     JobOutcome {
                                         id: job.id,
                                         summary: String::new(),
@@ -139,10 +149,15 @@ impl Coordinator {
                                     }
                                 }
                             };
+                            span.stop();
+                            crate::obs_gauge!("coordinator_workers_busy").sub(1);
                             stats
                                 .busy_nanos
                                 .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            crate::obs_counter!("coordinator_busy_nanos_total")
+                                .add(start.elapsed().as_nanos() as u64);
                             stats.completed.fetch_add(1, Ordering::Relaxed);
+                            crate::obs_counter!("coordinator_jobs_completed_total").inc();
                             // Receiver may have been dropped (fire-and-forget callers).
                             let _ = tx.send(outcome);
                         }
@@ -169,6 +184,8 @@ impl Coordinator {
         }
         jobs.push_back(job);
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("coordinator_jobs_submitted_total").inc();
+        crate::obs_gauge!("coordinator_queue_depth").add(1);
         self.queue.not_empty.notify_one();
     }
 

@@ -54,6 +54,7 @@ impl Bench {
 
     /// Time `f` repeatedly; returns the mean seconds per call.
     pub fn run<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> f64 {
+        crate::obs_counter!("bench_cases_total").inc();
         // Warmup + estimate per-call cost.
         let w_start = Instant::now();
         let mut calls = 0u64;
@@ -94,8 +95,16 @@ impl Bench {
             p99: percentile(&samples, 99.0),
         };
         let mean = res.mean;
+        crate::obs_histogram!("bench_case_seconds").observe(mean);
         self.results.push(res);
         mean
+    }
+
+    /// Bench report followed by the process-wide metrics dump, so a
+    /// bench run doubles as an instrumentation smoke test (the pipeline
+    /// and cluster counters it drove are visible next to its numbers).
+    pub fn report_with_metrics(&self) -> String {
+        format!("{}\n{}", self.report(), crate::obs::render_prometheus())
     }
 
     pub fn results(&self) -> &[CaseResult] {
@@ -134,5 +143,8 @@ mod tests {
         let rep = b.report();
         assert!(rep.contains("bench: demo"));
         assert!(rep.contains("noop-ish"));
+        let full = b.report_with_metrics();
+        assert!(full.contains("bench_cases_total"));
+        assert!(full.contains("bench_case_seconds"));
     }
 }

@@ -10,17 +10,36 @@
 //!
 //! The clustering hot spot executes JAX/Pallas AOT artifacts through
 //! PJRT (`runtime`, `cluster::PjrtBackend`) with a numerically equivalent
-//! native fallback (`cluster::NativeBackend`). See DESIGN.md.
+//! native fallback (`cluster::NativeBackend`). The `obs` module is the
+//! service's self-observability layer: counters, gauges, latency
+//! histograms, span timers and leveled logging, rendered as Prometheus
+//! text or a JSON snapshot. See README.md for the repository map.
+
+// Style choices this crate makes deliberately (hand-rolled JSON codec,
+// index-heavy numeric loops mirroring the paper's pseudocode).
+#![allow(
+    clippy::inherent_to_string,
+    clippy::needless_range_loop,
+    clippy::manual_range_contains,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::comparison_chain,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::should_implement_trait
+)]
+
 pub mod analysis;
 pub mod cluster;
 pub mod coordinator;
 pub mod eval;
 pub mod metrics;
+pub mod obs;
 pub mod regions;
 pub mod roughset;
 pub mod runtime;
 pub mod search;
-pub mod trace;
 pub mod simulator;
+pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -40,7 +40,7 @@ USAGE:
                        [--backend ...] [--save-trace FILE]
   autoanalyzer analyze-trace <FILE> [--backend ...]
   autoanalyzer simulate --workload <name> [--seed N] --out FILE [--format json|xml]
-  autoanalyzer serve [--jobs N] [--workers K] [--backend ...]
+  autoanalyzer serve [--jobs N] [--workers K] [--backend ...] [--metrics]
   autoanalyzer list
 
 WORKLOADS:
@@ -157,7 +157,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let trace = simulate(&spec, seed);
     if let Some(path) = args.str_opt("save-trace") {
         json_codec::save(&trace, std::path::Path::new(path))?;
-        eprintln!("trace saved to {path}");
+        autoanalyzer::log_info!("trace saved to {path}");
     }
     let backend = select_backend(
         args.str_or("backend", "auto"),
@@ -166,7 +166,10 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let start = Instant::now();
     let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
     println!("{}", report.render());
-    eprintln!("analysis took {:.1} ms", start.elapsed().as_secs_f64() * 1e3);
+    autoanalyzer::log_info!(
+        "analysis took {:.1} ms",
+        start.elapsed().as_secs_f64() * 1e3
+    );
     Ok(())
 }
 
@@ -243,7 +246,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for _ in 0..jobs {
         let outcome = rx.recv()?;
         if let Some(err) = outcome.error {
-            eprintln!("job {} failed: {err}", outcome.id);
+            autoanalyzer::log_error!("job {} failed: {err}", outcome.id);
         } else {
             latencies.push(outcome.latency.as_secs_f64());
             if outcome.id < 4 {
@@ -261,6 +264,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         autoanalyzer::util::stats::percentile(&latencies, 99.0) * 1e3,
     );
     coord.shutdown();
+    if args.flag("metrics") {
+        println!("\n{}", autoanalyzer::obs::render_prometheus());
+    }
     Ok(())
 }
 
@@ -273,10 +279,11 @@ fn cmd_list() {
 }
 
 fn main() {
-    let args = match Args::from_env(&["help"]) {
+    let args = match Args::from_env(&["help", "metrics"]) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
+            autoanalyzer::log_error!("bad arguments: {e}");
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     };
@@ -296,7 +303,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        autoanalyzer::log_error!("{e:#}");
         std::process::exit(1);
     }
 }

@@ -1,0 +1,189 @@
+//! Log-scale latency histogram with percentile extraction.
+//!
+//! Fixed power-of-two buckets: bucket `i` covers
+//! `(BASE_SECONDS * 2^(i-1), BASE_SECONDS * 2^i]`, with bucket 0
+//! catching everything at or below `BASE_SECONDS` (100 ns) and the last
+//! bucket everything above ~55,000 s. Recording is one relaxed
+//! `fetch_add` — no locks, no allocation — so the histogram can stay on
+//! in the analysis hot path. Percentiles are read from the bucket
+//! cumulative counts and reported as the matched bucket's upper bound
+//! (≤ one octave of quantization error, plenty for p50/p95/p99 triage).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: 100 ns · 2^39 ≈ 15 hours at the top.
+pub const BUCKETS: usize = 40;
+
+/// Lower edge of the first bucket, in seconds.
+pub const BASE_SECONDS: f64 = 1e-7;
+
+/// Lock-free log₂-bucketed histogram of seconds.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_index(secs: f64) -> usize {
+    if secs.is_nan() || secs <= BASE_SECONDS {
+        // NaN, negatives and sub-100ns all land in bucket 0.
+        return 0;
+    }
+    let idx = (secs / BASE_SECONDS).log2().ceil() as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper bound of bucket `i`, in seconds.
+fn upper_bound(i: usize) -> f64 {
+    BASE_SECONDS * (1u64 << i) as f64
+}
+
+impl Histogram {
+    /// Record one observation (seconds). Non-finite and negative values
+    /// count as 0 so a clock glitch can never poison the sum.
+    pub fn observe(&self, secs: f64) {
+        let secs = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.counts[bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos
+            .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all observations, in seconds.
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Mean observation, in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_seconds() / n as f64
+        }
+    }
+
+    /// The `p`-th percentile (`p` in [0, 100]), reported as the upper
+    /// bound of the matching bucket; 0 when empty. Reads are not
+    /// synchronized against concurrent writers — the answer is exact
+    /// for a quiesced histogram and approximate under load, which is
+    /// what a metrics endpoint wants.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 100.0) / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return upper_bound(i);
+            }
+        }
+        upper_bound(BUCKETS - 1)
+    }
+
+    /// Non-empty buckets as `(upper_bound_seconds, count)` pairs, for
+    /// the JSON sink.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                if n > 0 {
+                    Some((upper_bound(i), n))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(BASE_SECONDS), 0);
+        assert_eq!(bucket_index(BASE_SECONDS * 1.5), 1);
+        assert_eq!(bucket_index(BASE_SECONDS * 2.0), 1);
+        assert_eq!(bucket_index(BASE_SECONDS * 2.1), 2);
+        assert_eq!(bucket_index(f64::INFINITY), BUCKETS - 1);
+    }
+
+    #[test]
+    fn count_sum_mean() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.observe(0.001);
+        h.observe(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.sum_seconds() - 0.004).abs() < 1e-9);
+        assert!((h.mean() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_track_the_distribution() {
+        let h = Histogram::default();
+        // 90 fast observations (~1 ms), 10 slow (~1 s).
+        for _ in 0..90 {
+            h.observe(1e-3);
+        }
+        for _ in 0..10 {
+            h.observe(1.0);
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        // p50 in the ~1 ms octave, p99 in the ~1 s octave.
+        assert!(p50 >= 1e-3 && p50 < 4e-3, "p50 {p50}");
+        assert!(p99 >= 1.0 && p99 < 4.0, "p99 {p99}");
+        assert!(h.percentile(0.0) <= p50);
+        assert_eq!(h.percentile(100.0), p99);
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        assert_eq!(Histogram::default().percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn nonzero_buckets_only() {
+        let h = Histogram::default();
+        h.observe(1e-3);
+        h.observe(1e-3);
+        h.observe(0.5);
+        let buckets = h.nonzero_buckets();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets.iter().map(|&(_, n)| n).sum::<u64>(), 3);
+        // Sorted by bound, counts attached to the right octave.
+        assert!(buckets[0].0 < buckets[1].0);
+        assert_eq!(buckets[0].1, 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Leveled, machine-parseable logging (`log_error!` .. `log_debug!`).
+//!
+//! One logfmt line per event on stderr:
+//!
+//! ```text
+//! ts=1723108000.123 level=warn target=autoanalyzer::cluster::backend msg="..."
+//! ```
+//!
+//! The level is read once from `AUTOANALYZER_LOG`
+//! (`off|error|warn|info|debug`, default `info`), so a disabled call
+//! site costs one relaxed-ordering load. Emitted lines are tallied in
+//! the registry (`log_lines_total_<level>`), which is how CI can assert
+//! a run was warning-free without grepping stderr.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity; `Error` is the most severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// 0 = off; otherwise the numeric value of the maximum enabled level.
+fn max_level() -> u8 {
+    static MAX: OnceLock<u8> = OnceLock::new();
+    *MAX.get_or_init(|| {
+        match std::env::var("AUTOANALYZER_LOG").ok().as_deref() {
+            Some("off") | Some("none") | Some("0") => 0,
+            Some("error") => Level::Error as u8,
+            Some("warn") => Level::Warn as u8,
+            Some("debug") => Level::Debug as u8,
+            // "info", unset, and unknown values all mean the default —
+            // a typo must not silence the process.
+            _ => Level::Info as u8,
+        }
+    })
+}
+
+/// Is `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Emit one logfmt line (used through the `log_*!` macros, which supply
+/// `module_path!()` as the target).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    match level {
+        Level::Error => crate::obs_counter!("log_lines_total_error").inc(),
+        Level::Warn => crate::obs_counter!("log_lines_total_warn").inc(),
+        Level::Info => crate::obs_counter!("log_lines_total_info").inc(),
+        Level::Debug => crate::obs_counter!("log_lines_total_debug").inc(),
+    }
+    let ts = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let msg = args.to_string();
+    // One write call per line so concurrent workers do not interleave.
+    let line = format!(
+        "ts={ts:.3} level={} target={} msg={msg:?}\n",
+        level.as_str(),
+        target
+    );
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// Log at `Error` level. Always on unless `AUTOANALYZER_LOG=off`.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Warn` level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Info` level (the default threshold).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at `Debug` level. Off by default; `AUTOANALYZER_LOG=debug`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_order() {
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(Level::Warn.as_str(), "warn");
+    }
+
+    #[test]
+    fn default_threshold_is_info() {
+        // The test runner does not set AUTOANALYZER_LOG.
+        if std::env::var("AUTOANALYZER_LOG").is_err() {
+            assert!(enabled(Level::Error));
+            assert!(enabled(Level::Info));
+            assert!(!enabled(Level::Debug));
+        }
+    }
+
+    #[test]
+    fn emitting_increments_the_level_counter() {
+        let c = crate::obs::registry().counter("log_lines_total_warn");
+        let before = c.get();
+        crate::log_warn!("obs test line {}", 1);
+        assert!(c.get() >= before + 1);
+    }
+}

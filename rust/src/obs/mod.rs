@@ -1,0 +1,84 @@
+//! Self-observability: dependency-free metrics and tracing for the
+//! analyzer itself.
+//!
+//! The paper's pitch is that AutoAnalyzer is *lightweight*; this module
+//! is how the reproduction proves it about its own hot paths. It
+//! provides monotonic [`Counter`]s, [`Gauge`]s, log-scale latency
+//! [`Histogram`]s with percentile extraction, and RAII [`Span`] timers,
+//! all behind a process-global [`Registry`] cheap enough to leave on
+//! (one `OnceLock` check plus one relaxed atomic op per event at an
+//! instrumented site).
+//!
+//! Two sinks:
+//! - [`render_prometheus`] — Prometheus text exposition (counters,
+//!   gauges, and summaries with p50/p95/p99), printed by
+//!   `examples/serve_demo.rs` at exit and appended to bench reports.
+//! - [`snapshot_json`] — a structured JSON snapshot of the same
+//!   registry, the process-wide complement to the per-run JSON report
+//!   built by `analysis/report.rs::run_report`.
+//!
+//! Leveled logging rides along (`obs::log`, see the `log_*` macros):
+//! logfmt lines on stderr, level-gated by `AUTOANALYZER_LOG`.
+//!
+//! Instrumented sites cache their handle in a `OnceLock` via the
+//! `obs_counter!` / `obs_gauge!` / `obs_histogram!` / `obs_span!`
+//! macros, so steady-state cost is an atomic add — no name lookup.
+
+pub mod hist;
+pub mod log;
+pub mod registry;
+pub mod render;
+pub mod span;
+
+pub use hist::Histogram;
+pub use registry::{registry, Counter, Gauge, Registry};
+pub use render::{render_prometheus, snapshot_json};
+pub use span::Span;
+
+/// A process-global counter, resolved once and cached in a site-local
+/// static: `obs_counter!("pipeline_runs_total").inc()`.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static __OBS_C: ::std::sync::OnceLock<::std::sync::Arc<$crate::obs::Counter>> =
+            ::std::sync::OnceLock::new();
+        &**__OBS_C.get_or_init(|| $crate::obs::registry().counter($name))
+    }};
+}
+
+/// A process-global gauge, resolved once and cached in a site-local
+/// static: `obs_gauge!("coordinator_queue_depth").add(1)`.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static __OBS_G: ::std::sync::OnceLock<::std::sync::Arc<$crate::obs::Gauge>> =
+            ::std::sync::OnceLock::new();
+        &**__OBS_G.get_or_init(|| $crate::obs::registry().gauge($name))
+    }};
+}
+
+/// A process-global latency histogram, resolved once and cached:
+/// `obs_histogram!("coordinator_job_seconds").observe(secs)`.
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:expr) => {{
+        static __OBS_H: ::std::sync::OnceLock<::std::sync::Arc<$crate::obs::Histogram>> =
+            ::std::sync::OnceLock::new();
+        &**__OBS_H.get_or_init(|| $crate::obs::registry().histogram($name))
+    }};
+}
+
+/// An RAII span timer recording into the named histogram on drop (or
+/// `Span::stop`): `let _span = obs_span!("pipeline_analyze_seconds");`.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {{
+        static __OBS_S: ::std::sync::OnceLock<::std::sync::Arc<$crate::obs::Histogram>> =
+            ::std::sync::OnceLock::new();
+        $crate::obs::Span::new(
+            __OBS_S
+                .get_or_init(|| $crate::obs::registry().histogram($name))
+                .clone(),
+        )
+    }};
+}

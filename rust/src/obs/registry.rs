@@ -1,0 +1,163 @@
+//! The process-global metric registry: named counters, gauges and
+//! histograms behind one `OnceLock`. Instruments are `Arc`-shared so a
+//! call site resolves its handle once (see the `obs_*!` macros) and
+//! afterwards pays only a relaxed atomic op per event.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::obs::hist::Histogram;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depth, busy workers, active spans).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Name → instrument maps. `BTreeMap` keeps render output sorted and
+/// therefore diffable between runs.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Sorted snapshot of all counters (for the sinks).
+    pub fn counters_snapshot(&self) -> Vec<(String, Arc<Counter>)> {
+        let map = self.counters.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Sorted snapshot of all gauges.
+    pub fn gauges_snapshot(&self) -> Vec<(String, Arc<Gauge>)> {
+        let map = self.gauges.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Sorted snapshot of all histograms.
+    pub fn histograms_snapshot(&self) -> Vec<(String, Arc<Histogram>)> {
+        let map = self.histograms.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Number of spans currently open (must be 0 after a clean
+    /// shutdown — asserted by the coordinator observability tests).
+    pub fn active_spans(&self) -> i64 {
+        self.gauge("obs_active_spans").get()
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn gauge_tracks_level() {
+        let g = Gauge::default();
+        g.set(5);
+        g.add(3);
+        g.sub(7);
+        assert_eq!(g.get(), 1);
+        g.sub(2);
+        assert_eq!(g.get(), -1, "gauges may go negative; renders as-is");
+    }
+
+    #[test]
+    fn registry_returns_same_instrument_for_same_name() {
+        let r = Registry::default();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.add(3);
+        assert_eq!(b.get(), 3);
+        assert_eq!(r.counters_snapshot().len(), 1);
+    }
+
+    #[test]
+    fn snapshots_are_sorted_by_name() {
+        let r = Registry::default();
+        r.counter("zeta_total");
+        r.counter("alpha_total");
+        let names: Vec<String> =
+            r.counters_snapshot().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["alpha_total", "zeta_total"]);
+    }
+
+    #[test]
+    fn global_registry_is_shared_and_macros_cache_handles() {
+        // Only delta assertions: other tests in this binary may touch
+        // the global registry concurrently.
+        let before = crate::obs_counter!("obs_registry_selftest_total").get();
+        crate::obs_counter!("obs_registry_selftest_total").add(2);
+        let after = registry().counter("obs_registry_selftest_total").get();
+        assert!(after >= before + 2);
+    }
+}

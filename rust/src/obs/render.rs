@@ -1,0 +1,106 @@
+//! The two metric sinks: Prometheus text exposition and a structured
+//! JSON snapshot.
+//!
+//! Histograms are exposed Prometheus-summary-style — `{quantile="0.5"}`
+//! / `0.95` / `0.99` lines plus `_sum` and `_count` — because the
+//! quantiles are what serve_demo's exit dump and the bench reports are
+//! read for; the raw octave buckets are available through the JSON
+//! sink.
+
+use std::fmt::Write;
+
+use crate::obs::registry::registry;
+use crate::util::json::Json;
+
+/// Render every registered instrument in Prometheus text format,
+/// sorted by metric name.
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    for (name, c) in registry().counters_snapshot() {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {}", c.get());
+    }
+    for (name, g) in registry().gauges_snapshot() {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {}", g.get());
+    }
+    for (name, h) in registry().histograms_snapshot() {
+        let _ = writeln!(out, "# TYPE {name} summary");
+        for (q, p) in [(0.5, 50.0), (0.95, 95.0), (0.99, 99.0)] {
+            let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {}", h.percentile(p));
+        }
+        let _ = writeln!(out, "{name}_sum {}", h.sum_seconds());
+        let _ = writeln!(out, "{name}_count {}", h.count());
+    }
+    out
+}
+
+/// Snapshot the registry as JSON: `{"counters": {..}, "gauges": {..},
+/// "histograms": {name: {count, sum_s, mean_s, p50_s, p95_s, p99_s,
+/// buckets: [[upper_bound_s, count], ..]}}}`.
+pub fn snapshot_json() -> Json {
+    let mut counters = Json::obj();
+    for (name, c) in registry().counters_snapshot() {
+        counters = counters.push(&name, Json::Num(c.get() as f64));
+    }
+    let mut gauges = Json::obj();
+    for (name, g) in registry().gauges_snapshot() {
+        gauges = gauges.push(&name, Json::Num(g.get() as f64));
+    }
+    let mut histograms = Json::obj();
+    for (name, h) in registry().histograms_snapshot() {
+        let buckets = Json::Arr(
+            h.nonzero_buckets()
+                .into_iter()
+                .map(|(bound, n)| Json::Arr(vec![Json::Num(bound), Json::Num(n as f64)]))
+                .collect(),
+        );
+        histograms = histograms.push(
+            &name,
+            Json::obj()
+                .push("count", Json::Num(h.count() as f64))
+                .push("sum_s", Json::Num(h.sum_seconds()))
+                .push("mean_s", Json::Num(h.mean()))
+                .push("p50_s", Json::Num(h.percentile(50.0)))
+                .push("p95_s", Json::Num(h.percentile(95.0)))
+                .push("p99_s", Json::Num(h.percentile(99.0)))
+                .push("buckets", buckets),
+        );
+    }
+    Json::obj()
+        .push("counters", counters)
+        .push("gauges", gauges)
+        .push("histograms", histograms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_exposition_contains_registered_instruments() {
+        crate::obs_counter!("render_test_events_total").add(3);
+        crate::obs_gauge!("render_test_depth").set(2);
+        crate::obs_histogram!("render_test_seconds").observe(0.01);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE render_test_events_total counter"));
+        assert!(text.contains("# TYPE render_test_depth gauge"));
+        assert!(text.contains("# TYPE render_test_seconds summary"));
+        assert!(text.contains("render_test_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("render_test_seconds_count"));
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        crate::obs_histogram!("render_json_seconds").observe(0.2);
+        let snap = snapshot_json();
+        let text = snap.pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let h = parsed
+            .get("histograms")
+            .and_then(|hs| hs.get("render_json_seconds"))
+            .expect("histogram present");
+        assert!(h.get("count").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(h.get("p99_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

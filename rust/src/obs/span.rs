@@ -1,0 +1,107 @@
+//! RAII span timers: time a scope into a histogram.
+//!
+//! `obs_span!("stage_seconds")` starts the clock and bumps the global
+//! `obs_active_spans` gauge; dropping the span (or calling
+//! [`Span::stop`] for the elapsed seconds) records the duration and
+//! releases the gauge. Error paths are covered for free — a `?` that
+//! unwinds the scope still drops the span — which is what makes the
+//! "clean shutdown leaks no spans" invariant testable.
+
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::obs::hist::Histogram;
+use crate::obs::registry::{registry, Gauge};
+
+fn active_spans() -> &'static Gauge {
+    static GAUGE: OnceLock<Arc<Gauge>> = OnceLock::new();
+    &**GAUGE.get_or_init(|| registry().gauge("obs_active_spans"))
+}
+
+/// A running timer tied to a histogram (see `obs_span!`).
+#[derive(Debug)]
+pub struct Span {
+    hist: Arc<Histogram>,
+    start: Instant,
+    done: bool,
+}
+
+impl Span {
+    /// Start timing into `hist`. Prefer the `obs_span!` macro, which
+    /// caches the histogram handle at the call site.
+    pub fn new(hist: Arc<Histogram>) -> Span {
+        active_spans().add(1);
+        Span {
+            hist,
+            start: Instant::now(),
+            done: false,
+        }
+    }
+
+    /// Seconds elapsed so far, without finishing the span.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn record(&mut self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.hist.observe(secs);
+        active_spans().sub(1);
+        self.done = true;
+        secs
+    }
+
+    /// Finish now and return the elapsed seconds (instead of waiting
+    /// for scope end). Used where a stage's duration also goes into the
+    /// per-run report.
+    pub fn stop(mut self) -> f64 {
+        self.record()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.done {
+            self.record();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_records_once() {
+        let h = Arc::new(Histogram::default());
+        {
+            let _span = Span::new(h.clone());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.sum_seconds() >= 1e-3);
+    }
+
+    #[test]
+    fn stop_returns_elapsed_and_suppresses_drop() {
+        let h = Arc::new(Histogram::default());
+        let span = Span::new(h.clone());
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let secs = span.stop();
+        assert!(secs >= 1e-3);
+        assert_eq!(h.count(), 1, "stop + drop must record exactly once");
+    }
+
+    #[test]
+    fn elapsed_is_monotone_while_running() {
+        let span = Span::new(Arc::new(Histogram::default()));
+        let a = span.elapsed();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let b = span.elapsed();
+        assert!(b >= a);
+        // The absolute gauge balance is asserted by
+        // rust/tests/obs_coordinator.rs, which owns its whole process;
+        // lib tests run in parallel and would race on the global gauge.
+        span.stop();
+    }
+}

@@ -19,6 +19,10 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// The real xla_extension binding is unavailable offline; the stub
+// mirrors its API and fails client creation cleanly (see xla_stub.rs).
+// Vendor the `xla` crate and replace this alias to re-enable PJRT.
+use crate::runtime::xla_stub as xla;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 

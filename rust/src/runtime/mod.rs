@@ -1,3 +1,9 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The `xla` FFI binding is aliased to [`xla_stub`] in this build (the
+//! real xla_extension crate is not on the offline registry); the stub
+//! fails client creation cleanly so `select_backend("auto", ..)` falls
+//! back to the native engine. See `xla_stub` for how to re-enable PJRT.
 pub mod client;
+pub mod xla_stub;
 pub use client::*;

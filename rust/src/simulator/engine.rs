@@ -20,6 +20,10 @@ use crate::workloads::spec::{Scope, WorkloadSpec};
 
 /// Simulate one run. Deterministic for a given (spec, seed).
 pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
+    crate::obs_counter!("simulator_runs_total").inc();
+    // One simulated event per (rank, region) sample cell.
+    crate::obs_counter!("simulator_events_total")
+        .add((spec.nprocs * spec.regions.len()) as u64);
     let nodes: Vec<(usize, usize, &str, bool)> = spec
         .regions
         .iter()

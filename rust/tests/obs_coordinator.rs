@@ -1,0 +1,96 @@
+//! Observability invariants of the coordinator service.
+//!
+//! These assert *absolute* values of the process-global registry
+//! (queue depth back to zero, span gauge balanced), so they live in
+//! their own test binary — the registry is per-process — and serialize
+//! on one mutex because the test harness runs #[test] fns in parallel.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use autoanalyzer::analysis::pipeline::AnalysisConfig;
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::obs;
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .expect("obs test mutex")
+}
+
+fn native_factory() -> anyhow::Result<Box<dyn ClusterBackend>> {
+    Ok(Box::new(NativeBackend))
+}
+
+/// Push `n` synthetic jobs through a fresh coordinator and drain it.
+fn run_jobs(n: u64, workers: usize) {
+    let (coord, rx) = Coordinator::start(workers, 8, native_factory);
+    for i in 0..n {
+        let inj = if i % 2 == 0 {
+            vec![(2usize, Inject::Imbalance)]
+        } else {
+            vec![]
+        };
+        let spec = synthetic(4, 6, &inj, i);
+        coord.submit(AnalysisJob {
+            id: i,
+            trace: simulate(&spec, i),
+            config: AnalysisConfig::default(),
+        });
+    }
+    for _ in 0..n {
+        rx.recv().expect("outcome");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn queue_depth_gauge_returns_to_zero_after_drain() {
+    let _g = lock();
+    run_jobs(12, 3);
+    assert_eq!(
+        obs::registry().gauge("coordinator_queue_depth").get(),
+        0,
+        "every submitted job must have been popped"
+    );
+}
+
+#[test]
+fn job_latency_histogram_counts_every_submitted_job() {
+    let _g = lock();
+    let hist = obs::registry().histogram("coordinator_job_seconds");
+    let submitted = obs::registry().counter("coordinator_jobs_submitted_total");
+    let completed = obs::registry().counter("coordinator_jobs_completed_total");
+    let (h0, s0, c0) = (hist.count(), submitted.get(), completed.get());
+    run_jobs(10, 2);
+    assert_eq!(submitted.get() - s0, 10);
+    assert_eq!(completed.get() - c0, 10);
+    assert_eq!(
+        hist.count() - h0,
+        10,
+        "one latency observation per submitted job"
+    );
+    assert!(hist.sum_seconds() > 0.0);
+    assert!(hist.percentile(99.0) >= hist.percentile(50.0));
+}
+
+#[test]
+fn clean_shutdown_leaks_no_spans_and_idles_workers() {
+    let _g = lock();
+    run_jobs(8, 4);
+    assert_eq!(
+        obs::registry().active_spans(),
+        0,
+        "all spans must close by shutdown"
+    );
+    assert_eq!(obs::registry().gauge("coordinator_workers").get(), 0);
+    assert_eq!(obs::registry().gauge("coordinator_workers_busy").get(), 0);
+    // The dump renders cleanly after a full service lifecycle.
+    let text = obs::render_prometheus();
+    assert!(text.contains("# TYPE coordinator_jobs_submitted_total counter"));
+    assert!(text.contains("coordinator_job_seconds{quantile=\"0.95\"}"));
+    assert!(text.contains("# TYPE pipeline_stage_dissimilarity_seconds summary"));
+}
