@@ -4,6 +4,8 @@
 //!
 //!     cargo run --release --example mpibzip2_case_study
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
 use autoanalyzer::regions::RegionId;
@@ -14,7 +16,7 @@ const SEED: u64 = 2011;
 
 fn main() -> anyhow::Result<()> {
     let backend = select_backend("auto", "artifacts")?;
-    let trace = simulate(&mpibzip2::mpibzip2(), SEED);
+    let trace = Arc::new(simulate(&mpibzip2::mpibzip2(), SEED));
     println!("{}", trace.tree.render());
     let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
     println!("{}", report.render());

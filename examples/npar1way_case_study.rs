@@ -3,6 +3,8 @@
 //!
 //!     cargo run --release --example npar1way_case_study
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
 use autoanalyzer::metrics::{Metric, MetricView};
@@ -17,7 +19,7 @@ const SEED: u64 = 2011;
 fn main() -> anyhow::Result<()> {
     let backend = select_backend("auto", "artifacts")?;
     let base = NparParams::default();
-    let trace = simulate(&npar1way(&base), SEED);
+    let trace = Arc::new(simulate(&npar1way(&base), SEED));
     let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
     println!("{}", report.render());
 

@@ -8,6 +8,8 @@
 //! regions driving the clusters apart → k-means severity bands over
 //! per-region CRNM → rough-set root causes for both bottleneck kinds.
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
 use autoanalyzer::simulator::engine::simulate;
@@ -25,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         &[(4, Inject::Imbalance), (7, Inject::DiskHog), (9, Inject::NetHog)],
         42,
     );
-    let trace = simulate(&spec, 42);
+    let trace = Arc::new(simulate(&spec, 42));
     println!(
         "simulated {}: {} processes x {} regions, wall {:.1}s\n",
         trace.tree.program(),

@@ -8,6 +8,7 @@
 //! found. Each worker owns its own backend instance (PJRT clients wrap
 //! raw C handles and are created on the worker thread).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use autoanalyzer::analysis::pipeline::AnalysisConfig;
@@ -37,7 +38,7 @@ fn main() -> anyhow::Result<()> {
                     };
                     AnalysisJob {
                         id: i,
-                        trace: simulate(&synthetic(8, 12, &inj, i), i),
+                        trace: Arc::new(simulate(&synthetic(8, 12, &inj, i), i)),
                         config: AnalysisConfig::default(),
                     }
                 })

@@ -12,6 +12,8 @@
 //! Fig. 14 speedup table; (5) rerun at fine grain (Fig. 15) to refine
 //! the bottlenecks to regions 19 and 21.
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
 use autoanalyzer::simulator::engine::simulate;
@@ -28,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- round 1: coarse-grain analysis of the original program ---
     println!("================ ROUND 1: coarse-grain analysis ================\n");
-    let trace = simulate(&st_coarse(&base), SEED);
+    let trace = Arc::new(simulate(&st_coarse(&base), SEED));
     let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
     println!("{}", report.render());
 
@@ -43,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let t_dis = simulate(&st_coarse(&optimize::st_fix_dissimilarity(&base)), SEED).run_wall();
     let t_dsp = simulate(&st_coarse(&optimize::st_fix_disparity(&base)), SEED).run_wall();
     let both_params = optimize::st_fix_both(&base);
-    let both_trace = simulate(&st_coarse(&both_params), SEED);
+    let both_trace = Arc::new(simulate(&st_coarse(&both_params), SEED));
     let t_both = both_trace.run_wall();
 
     let mut fig14 = Table::new(
@@ -84,7 +86,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- round 2: fine-grain refinement (Fig. 15/16) ---
     println!("================ ROUND 2: fine-grain refinement ================\n");
-    let fine_trace = simulate(&st_fine(&base), SEED);
+    let fine_trace = Arc::new(simulate(&st_fine(&base), SEED));
     let fine_report = analyze(&fine_trace, backend.as_ref(), &AnalysisConfig::default())?;
     println!("{}", fine_trace.tree.render());
     println!("{}", fine_report.dissimilarity.render());

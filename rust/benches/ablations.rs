@@ -10,6 +10,7 @@
 //! A4. simulator phases: do the §6.4 wall-clock findings depend on the
 //!     phase interleaving depth?
 
+use autoanalyzer::analysis::session::AnalysisSession;
 use autoanalyzer::cluster::kmeans::{
     farthest_point_init, kmeans_fixed, linspace_init, to_severities, KMEANS_ITERS,
 };
@@ -88,8 +89,12 @@ fn main() {
         let mut spec = st_coarse(&StParams::default());
         spec.phases = phases;
         let t = simulate(&spec, 2011);
-        let r = disparity_search(&t, &NativeBackend, MetricView::Plain(Metric::WallClock))
-            .unwrap();
+        let r = disparity_search(
+            &AnalysisSession::from_trace(t),
+            &NativeBackend,
+            MetricView::Plain(Metric::WallClock),
+        )
+        .unwrap();
         let flags: Vec<String> = r.ccrs.iter().map(|x| x.to_string()).collect();
         a4.row(&[phases.to_string(), flags.join(",")]);
     }

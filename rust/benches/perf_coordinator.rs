@@ -1,6 +1,7 @@
 //! `cargo bench --bench perf_coordinator` — analysis-service throughput
 //! scaling across worker counts (the L3 perf deliverable).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use autoanalyzer::analysis::pipeline::AnalysisConfig;
@@ -12,7 +13,7 @@ use autoanalyzer::util::stats::percentile;
 use autoanalyzer::util::tables::Table;
 use autoanalyzer::workloads::synthetic::{synthetic, Inject};
 
-fn make_traces(n: u64) -> Vec<Trace> {
+fn make_traces(n: u64) -> Vec<Arc<Trace>> {
     (0..n)
         .map(|i| {
             let inj = match i % 4 {
@@ -21,17 +22,18 @@ fn make_traces(n: u64) -> Vec<Trace> {
                 2 => vec![(4usize, Inject::CacheThrash)],
                 _ => vec![],
             };
-            simulate(&synthetic(8, 12, &inj, i), i)
+            Arc::new(simulate(&synthetic(8, 12, &inj, i), i))
         })
         .collect()
 }
 
-fn run(workers: usize, traces: &[Trace]) -> (f64, f64, f64) {
+fn run(workers: usize, traces: &[Arc<Trace>]) -> (f64, f64, f64) {
     let (coord, rx) = Coordinator::start(workers, 32, || {
         Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
     });
     let start = Instant::now();
     for (i, t) in traces.iter().enumerate() {
+        // Arc bump, not a sample copy — submit is O(1) in trace size.
         coord.submit(AnalysisJob {
             id: i as u64,
             trace: t.clone(),

@@ -1,11 +1,17 @@
 //! `cargo bench --bench perf_pipeline` — end-to-end pipeline costs:
 //! simulation, Algorithm 2 (the recluster-heavy search), disparity
 //! analysis, rough-set reduction, trace codecs, and the complete
-//! `analyze` on each paper workload.
+//! `analyze` on each paper workload. Search/analyze cases come in two
+//! flavours: *cold* (fresh `AnalysisSession` per call, the
+//! submit-one-trace service path) and *warm* (session reused, so the
+//! memoized matrices/distances show the steady-state re-analysis cost).
 
-use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use std::sync::Arc;
+
+use autoanalyzer::analysis::pipeline::{analyze, analyze_session, AnalysisConfig};
 use autoanalyzer::analysis::rootcause::{disparity_root_cause, dissimilarity_root_cause};
-use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::analysis::session::AnalysisSession;
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
 use autoanalyzer::eval::bench::Bench;
 use autoanalyzer::metrics::{Metric, MetricView};
 use autoanalyzer::search::{disparity_search, dissimilarity_search};
@@ -21,24 +27,39 @@ fn main() {
     let mut bench = Bench::new("perf_pipeline");
 
     let st_spec = st_coarse(&StParams::default());
-    let st = simulate(&st_spec, 2011);
-    let fine = simulate(&st_fine(&StParams::default()), 2011);
-    let npar = simulate(&npar1way(&NparParams::default()), 2011);
-    let bzip = simulate(&mpibzip2::mpibzip2(), 2011);
-    let big = simulate(
+    let st = Arc::new(simulate(&st_spec, 2011));
+    let fine = Arc::new(simulate(&st_fine(&StParams::default()), 2011));
+    let npar = Arc::new(simulate(&npar1way(&NparParams::default()), 2011));
+    let bzip = Arc::new(simulate(&mpibzip2::mpibzip2(), 2011));
+    let big = Arc::new(simulate(
         &synthetic::synthetic(32, 48, &[(5, synthetic::Inject::Imbalance)], 3),
         3,
-    );
+    ));
 
     bench.run("simulate st (8p x 14r)", || simulate(&st_spec, 2011));
-    bench.run("dissimilarity search st", || {
-        dissimilarity_search(&st, &backend, MetricView::Plain(Metric::CpuClock)).unwrap()
+    bench.run("dissimilarity search st (cold)", || {
+        dissimilarity_search(
+            &AnalysisSession::new(st.clone()),
+            &backend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap()
     });
-    bench.run("dissimilarity search 32p x 48r", || {
-        dissimilarity_search(&big, &backend, MetricView::Plain(Metric::CpuClock)).unwrap()
+    let warm_st = AnalysisSession::new(st.clone());
+    bench.run("dissimilarity search st (warm)", || {
+        dissimilarity_search(&warm_st, &backend, MetricView::Plain(Metric::CpuClock)).unwrap()
     });
-    bench.run("disparity search st", || {
-        disparity_search(&st, &backend, MetricView::Crnm).unwrap()
+    bench.run("dissimilarity search 32p x 48r (cold)", || {
+        dissimilarity_search(
+            &AnalysisSession::new(big.clone()),
+            &backend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap()
+    });
+    bench.run("disparity search st (cold)", || {
+        disparity_search(&AnalysisSession::new(st.clone()), &backend, MetricView::Crnm)
+            .unwrap()
     });
     let decision = backend
         .simplified_optics(&autoanalyzer::metrics::perf_matrix(
@@ -46,28 +67,34 @@ fn main() {
             MetricView::Plain(Metric::CpuClock),
         ))
         .unwrap();
-    bench.run("rough set dissimilarity st", || {
-        dissimilarity_root_cause(&st, &backend, &decision).unwrap()
+    bench.run("rough set dissimilarity st (cold)", || {
+        dissimilarity_root_cause(&AnalysisSession::new(st.clone()), &backend, &decision)
+            .unwrap()
     });
-    let ccrs: Vec<_> = disparity_search(&st, &backend, MetricView::Crnm)
-        .unwrap()
-        .ccrs;
-    bench.run("rough set disparity st", || {
-        disparity_root_cause(&st, &backend, &ccrs).unwrap()
+    let ccrs: Vec<_> =
+        disparity_search(&AnalysisSession::new(st.clone()), &backend, MetricView::Crnm)
+            .unwrap()
+            .ccrs;
+    bench.run("rough set disparity st (cold)", || {
+        disparity_root_cause(&AnalysisSession::new(st.clone()), &backend, &ccrs).unwrap()
     });
-    bench.run("analyze st full", || {
+    bench.run("analyze st full (cold)", || {
         analyze(&st, &backend, &AnalysisConfig::default()).unwrap()
     });
-    bench.run("analyze st-fine full", || {
+    let warm_full = AnalysisSession::new(st.clone());
+    bench.run("analyze st full (warm session)", || {
+        analyze_session(&warm_full, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("analyze st-fine full (cold)", || {
         analyze(&fine, &backend, &AnalysisConfig::default()).unwrap()
     });
-    bench.run("analyze npar1way full", || {
+    bench.run("analyze npar1way full (cold)", || {
         analyze(&npar, &backend, &AnalysisConfig::default()).unwrap()
     });
-    bench.run("analyze mpibzip2 full", || {
+    bench.run("analyze mpibzip2 full (cold)", || {
         analyze(&bzip, &backend, &AnalysisConfig::default()).unwrap()
     });
-    bench.run("analyze 32p x 48r full", || {
+    bench.run("analyze 32p x 48r full (cold)", || {
         analyze(&big, &backend, &AnalysisConfig::default()).unwrap()
     });
     bench.run("trace json encode st", || json_codec::to_json(&st).pretty());
@@ -78,7 +105,4 @@ fn main() {
     });
 
     println!("{}", bench.report_with_metrics());
-
-    use autoanalyzer::cluster::ClusterBackend as _;
-    let _ = backend.name();
 }

@@ -1,9 +1,13 @@
 //! The AutoAnalyzer analysis layer (paper Fig. 6, §4.4).
 //!
+//! - `session`: shared-ownership analysis state — an `Arc<Trace>` plus
+//!   memoized performance matrices, means, distance matrices,
+//!   clusterings and k-means, so every `MetricView` is materialized at
+//!   most once per trace;
 //! - `rootcause`: builds the two decision tables of §4.4.2 and extracts
 //!   root causes via the rough set engine;
 //! - `pipeline`: the end-to-end flow — existence tests, bottleneck
-//!   searches, root-cause analysis — over a trace and a
+//!   searches, root-cause analysis — over an `AnalysisSession` and a
 //!   `ClusterBackend`;
 //! - `report`: renders the combined findings the way the paper's
 //!   figures print them.
@@ -11,6 +15,8 @@
 pub mod pipeline;
 pub mod report;
 pub mod rootcause;
+pub mod session;
 
-pub use pipeline::{analyze, AnalysisReport};
+pub use pipeline::{analyze, analyze_session, AnalysisReport};
 pub use rootcause::{DissimilarityRootCause, DisparityRootCause};
+pub use session::{AnalysisSession, SessionStats};

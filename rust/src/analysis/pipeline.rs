@@ -4,12 +4,15 @@
 //! clock time → (2) disparity severity clustering + refinement on CRNM
 //! → (3) rough-set root causes for whichever bottleneck kinds exist.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::analysis::rootcause::{
     dissimilarity_root_cause, disparity_root_cause, DissimilarityRootCause,
     DisparityRootCause,
 };
+use crate::analysis::session::AnalysisSession;
 use crate::cluster::ClusterBackend;
 use crate::metrics::{Metric, MetricView};
 use crate::search::{disparity_search, dissimilarity_search, DisparityResult, DissimilarityResult};
@@ -71,29 +74,44 @@ impl Default for AnalysisConfig {
     }
 }
 
-/// Run the full pipeline.
+/// Run the full pipeline on a shared trace. Builds a fresh
+/// [`AnalysisSession`] internally; callers that analyze the same trace
+/// repeatedly (or want cache accounting) should build the session
+/// themselves and call [`analyze_session`].
 pub fn analyze(
-    trace: &Trace,
+    trace: &Arc<Trace>,
+    backend: &dyn ClusterBackend,
+    config: &AnalysisConfig,
+) -> Result<AnalysisReport> {
+    analyze_session(&AnalysisSession::new(trace.clone()), backend, config)
+}
+
+/// Run the full pipeline against a memoizing session: within one call
+/// (and across repeated calls on the same session) each `MetricView`
+/// matrix, mean vector and distance matrix is built at most once.
+pub fn analyze_session(
+    session: &AnalysisSession,
     backend: &dyn ClusterBackend,
     config: &AnalysisConfig,
 ) -> Result<AnalysisReport> {
     let total = crate::obs_span!("pipeline_analyze_seconds");
     crate::obs_counter!("pipeline_runs_total").inc();
+    let trace = session.trace();
     trace.validate().map_err(anyhow::Error::msg)?;
 
     let span = crate::obs_span!("pipeline_stage_dissimilarity_seconds");
-    let dissimilarity = dissimilarity_search(trace, backend, config.dissimilarity_view)?;
+    let dissimilarity = dissimilarity_search(session, backend, config.dissimilarity_view)?;
     let dissimilarity_s = span.stop();
     crate::obs_counter!("pipeline_reclusters_total").add(dissimilarity.reclusters as u64);
 
     let span = crate::obs_span!("pipeline_stage_disparity_seconds");
-    let disparity = disparity_search(trace, backend, config.disparity_view)?;
+    let disparity = disparity_search(session, backend, config.disparity_view)?;
     let disparity_s = span.stop();
 
     let span = crate::obs_span!("pipeline_stage_rootcause_seconds");
     let dissimilarity_causes = if config.root_causes && dissimilarity.exists() {
         Some(dissimilarity_root_cause(
-            trace,
+            session,
             backend,
             &dissimilarity.clustering,
         )?)
@@ -101,7 +119,7 @@ pub fn analyze(
         None
     };
     let disparity_causes = if config.root_causes && disparity.exists() {
-        Some(disparity_root_cause(trace, backend, &disparity.ccrs)?)
+        Some(disparity_root_cause(session, backend, &disparity.ccrs)?)
     } else {
         None
     };
@@ -138,7 +156,7 @@ mod tests {
 
     #[test]
     fn pipeline_runs_on_st() {
-        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let trace = Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         assert_eq!(report.nregions, 14);
         assert!(report.dissimilarity.exists(), "ST has load imbalance");
@@ -148,9 +166,45 @@ mod tests {
     }
 
     #[test]
+    fn session_builds_each_matrix_exactly_once() {
+        let trace = Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
+        let session = AnalysisSession::new(trace);
+        analyze_session(&session, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        let first = session.stats();
+        // Default config touches 6 distinct matrix views: CPU clock for
+        // dissimilarity + the five rough-set condition attributes. Each
+        // must be built exactly once no matter how many stages ask.
+        assert_eq!(first.matrix_builds, 6, "{first:?}");
+        // Means: CRNM for disparity + the five attributes.
+        assert_eq!(first.means_builds, 6, "{first:?}");
+        // The dissimilarity stage requests the CPU-clock matrix for both
+        // the existence test and the Algorithm 2 working copy — the
+        // second request must hit the cache.
+        assert!(first.matrix_hits >= 1, "{first:?}");
+
+        // A second analyze on the same session rebuilds nothing.
+        analyze_session(&session, &NativeBackend, &AnalysisConfig::default()).unwrap();
+        let second = session.stats();
+        assert_eq!(second.matrix_builds, first.matrix_builds, "{second:?}");
+        assert_eq!(second.means_builds, first.means_builds, "{second:?}");
+        assert_eq!(second.dist_builds, first.dist_builds, "{second:?}");
+        assert!(second.matrix_hits > first.matrix_hits);
+
+        // The global obs counters carry the same signal for scrapers
+        // (other parallel tests also bump them, so only >= holds here).
+        assert!(
+            crate::obs_counter!("session_matrix_build_total").get()
+                >= second.matrix_builds
+        );
+        assert!(
+            crate::obs_counter!("session_matrix_hit_total").get() >= second.matrix_hits
+        );
+    }
+
+    #[test]
     fn analyze_populates_stage_timings_and_metrics() {
         let runs_before = crate::obs_counter!("pipeline_runs_total").get();
-        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let trace = Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         let t = report.timings;
         assert!(t.total_s > 0.0);

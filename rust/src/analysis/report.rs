@@ -154,7 +154,7 @@ mod tests {
 
     #[test]
     fn report_renders_all_sections() {
-        let trace = simulate(&st_coarse(&StParams::default()), 7);
+        let trace = std::sync::Arc::new(simulate(&st_coarse(&StParams::default()), 7));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         let text = report.render();
         assert!(text.contains("dissimilarity analysis"));
@@ -167,7 +167,7 @@ mod tests {
 
     #[test]
     fn run_report_is_valid_json_with_findings_and_timings() {
-        let trace = simulate(&st_coarse(&StParams::default()), 2011);
+        let trace = std::sync::Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         let json = report.run_report();
         let parsed = crate::util::json::Json::parse(&json.pretty()).unwrap();

@@ -13,13 +13,13 @@
 
 use anyhow::Result;
 
+use crate::analysis::session::AnalysisSession;
 use crate::cluster::kmeans::Severity;
 use crate::cluster::optics::Clustering;
 use crate::cluster::ClusterBackend;
-use crate::metrics::{perf_matrix, region_means, Metric, MetricView};
+use crate::metrics::{Metric, MetricView};
 use crate::regions::RegionId;
 use crate::roughset::{core_attrs, minimal_reducts, DecisionTable, DiscernMatrix};
-use crate::trace::Trace;
 
 /// Attribute names a1..a5 in the paper's order.
 pub fn attr_names() -> Vec<&'static str> {
@@ -93,16 +93,18 @@ impl DisparityRootCause {
 /// `decision`: the CPU-clock-time clustering of the processes (the
 /// dissimilarity existence result).
 pub fn dissimilarity_root_cause(
-    trace: &Trace,
+    session: &AnalysisSession,
     backend: &dyn ClusterBackend,
     decision: &Clustering,
 ) -> Result<DissimilarityRootCause> {
+    let trace = session.trace();
     let mut table = DecisionTable::new(&attr_names());
-    // Attribute value = cluster id of the process under metric k.
-    let mut attr_clusters: Vec<Clustering> = Vec::new();
+    // Attribute value = cluster id of the process under metric k; the
+    // per-metric matrix + clustering come from the session cache, so
+    // repeated analyses of one trace never recompute them.
+    let mut attr_clusters = Vec::new();
     for metric in Metric::rough_set_attrs() {
-        let x = perf_matrix(trace, MetricView::Plain(metric));
-        attr_clusters.push(backend.simplified_optics(&x)?);
+        attr_clusters.push(session.clustering(backend, MetricView::Plain(metric))?);
     }
     for p in 0..trace.nprocs() {
         let conditions: Vec<u32> = attr_clusters
@@ -124,18 +126,17 @@ pub fn dissimilarity_root_cause(
 ///
 /// `bottlenecks`: the disparity CCR set.
 pub fn disparity_root_cause(
-    trace: &Trace,
+    session: &AnalysisSession,
     backend: &dyn ClusterBackend,
     bottlenecks: &[RegionId],
 ) -> Result<DisparityRootCause> {
+    let trace = session.trace();
     let mut table = DecisionTable::new(&attr_names());
     // Attribute value = 1 if the region's severity for metric k is
-    // above medium.
+    // above medium (means + k-means memoized by the session).
     let mut attr_high: Vec<Vec<bool>> = Vec::new();
     for metric in Metric::rough_set_attrs() {
-        let means = region_means(trace, MetricView::Plain(metric));
-        let points: Vec<f32> = means.iter().map(|&m| m as f32).collect();
-        let km = backend.severity_kmeans(&points)?;
+        let km = session.severity_kmeans(backend, MetricView::Plain(metric))?;
         attr_high.push(
             km.severities
                 .iter()
@@ -194,7 +195,7 @@ mod tests {
         for p in 0..4 {
             t.sample_mut(p, RegionId(0)).wall = 100.0;
             for r in 1..=5 {
-                let s = t.sample_mut(p, RegionId(r));
+                let mut s = t.sample_mut(p, RegionId(r));
                 s.wall = 10.0;
                 s.cpu = 8.0;
                 s.instructions = 1e9;
@@ -216,9 +217,9 @@ mod tests {
 
     #[test]
     fn disparity_causes_point_at_disk_and_instructions() {
-        let t = trace();
+        let s = AnalysisSession::from_trace(trace());
         let bottlenecks = vec![RegionId(2), RegionId(3)];
-        let rc = disparity_root_cause(&t, &NativeBackend, &bottlenecks).unwrap();
+        let rc = disparity_root_cause(&s, &NativeBackend, &bottlenecks).unwrap();
         let causes = rc.cause_names();
         assert!(
             causes.contains(&"disk I/O quantity"),
@@ -250,7 +251,7 @@ mod tests {
         let mut t = Trace::new(tree, 4);
         for p in 0..4 {
             t.sample_mut(p, RegionId(0)).wall = 100.0;
-            let hot = t.sample_mut(p, RegionId(1));
+            let mut hot = t.sample_mut(p, RegionId(1));
             let load = if p < 2 { 1.0 } else { 3.0 };
             hot.cpu = 100.0 * load;
             hot.instructions = 1e12 * load;
@@ -259,15 +260,18 @@ mod tests {
             hot.l1_miss = 1e8 * load; // rate constant
             hot.l2_access = 1e8 * load;
             hot.l2_miss = 1e6 * load;
-            let cold = t.sample_mut(p, RegionId(2));
+            drop(hot);
+            let mut cold = t.sample_mut(p, RegionId(2));
             cold.cpu = 50.0;
             cold.instructions = 1e11;
             cold.cycles = 1e11;
         }
-        let x = perf_matrix(&t, MetricView::Plain(Metric::CpuClock));
-        let decision = NativeBackend.simplified_optics(&x).unwrap();
+        let s = AnalysisSession::from_trace(t);
+        let decision = s
+            .clustering(&NativeBackend, MetricView::Plain(Metric::CpuClock))
+            .unwrap();
         assert_eq!(decision.num_clusters(), 2);
-        let rc = dissimilarity_root_cause(&t, &NativeBackend, &decision).unwrap();
+        let rc = dissimilarity_root_cause(&s, &NativeBackend, &decision).unwrap();
         assert!(
             rc.cause_names().contains(&"instructions retired"),
             "causes {:?}\n{}",
@@ -278,8 +282,8 @@ mod tests {
 
     #[test]
     fn renders_tables() {
-        let t = trace();
-        let rc = disparity_root_cause(&t, &NativeBackend, &[RegionId(2)]).unwrap();
+        let s = AnalysisSession::from_trace(trace());
+        let rc = disparity_root_cause(&s, &NativeBackend, &[RegionId(2)]).unwrap();
         let rendered = rc.table.render("Table 4");
         assert!(rendered.contains("| ID | a1 | a2 | a3 | a4 | a5 | D |"));
         assert!(rc.matrix_render.contains("discernibility"));

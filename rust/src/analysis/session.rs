@@ -1,0 +1,289 @@
+//! `AnalysisSession` — shared-ownership, build-once analysis state.
+//!
+//! The pipeline reads the same per-process × per-region data many
+//! times: the dissimilarity stage wants the CPU-clock matrix, the
+//! rough-set stage wants one matrix + clustering per condition
+//! attribute, the disparity stage wants per-region means, and the
+//! §6.4 metric study re-runs all of it per metric. A session owns the
+//! trace behind an `Arc` and memoizes every derived artifact —
+//! performance matrices, per-region means, backend distance matrices,
+//! Algorithm 1 clusterings, and severity k-means — so each
+//! `MetricView` is materialized exactly once per trace, no matter how
+//! many stages (or repeated `analyze` calls) ask for it.
+//!
+//! Cache accounting is observable two ways: per-session via
+//! [`AnalysisSession::stats`] (deterministic, used by tests), and
+//! process-wide via the `session_{matrix,means,dists}_{build,hit}_total`
+//! obs counters (scraped by the service).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cluster::kmeans::KmeansResult;
+use crate::cluster::optics::{self, Clustering};
+use crate::cluster::ClusterBackend;
+use crate::metrics::{perf_matrix, region_means, MetricView};
+use crate::trace::Trace;
+use crate::util::matrix::Matrix;
+
+/// Backend-dependent artifacts are keyed by backend name too, so a
+/// session can serve native and PJRT consumers without mixing results.
+type BackendKey = (&'static str, MetricView);
+
+#[derive(Default)]
+struct Caches {
+    matrices: HashMap<MetricView, Arc<Matrix>>,
+    means: HashMap<MetricView, Arc<Vec<f64>>>,
+    dists: HashMap<BackendKey, Arc<Matrix>>,
+    clusterings: HashMap<BackendKey, Arc<Clustering>>,
+    kmeans: HashMap<BackendKey, Arc<KmeansResult>>,
+}
+
+/// Snapshot of a session's cache accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub matrix_builds: u64,
+    pub matrix_hits: u64,
+    pub means_builds: u64,
+    pub means_hits: u64,
+    pub dist_builds: u64,
+    pub dist_hits: u64,
+}
+
+pub struct AnalysisSession {
+    trace: Arc<Trace>,
+    caches: Mutex<Caches>,
+    matrix_builds: AtomicU64,
+    matrix_hits: AtomicU64,
+    means_builds: AtomicU64,
+    means_hits: AtomicU64,
+    dist_builds: AtomicU64,
+    dist_hits: AtomicU64,
+}
+
+impl AnalysisSession {
+    pub fn new(trace: Arc<Trace>) -> AnalysisSession {
+        AnalysisSession {
+            trace,
+            caches: Mutex::new(Caches::default()),
+            matrix_builds: AtomicU64::new(0),
+            matrix_hits: AtomicU64::new(0),
+            means_builds: AtomicU64::new(0),
+            means_hits: AtomicU64::new(0),
+            dist_builds: AtomicU64::new(0),
+            dist_hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn from_trace(trace: Trace) -> AnalysisSession {
+        AnalysisSession::new(Arc::new(trace))
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Share the underlying trace (cheap refcount bump).
+    pub fn trace_arc(&self) -> Arc<Trace> {
+        self.trace.clone()
+    }
+
+    /// The `view` performance matrix, built at most once per session.
+    pub fn matrix(&self, view: MetricView) -> Arc<Matrix> {
+        {
+            let caches = self.caches.lock().unwrap();
+            if let Some(m) = caches.matrices.get(&view) {
+                self.matrix_hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs_counter!("session_matrix_hit_total").inc();
+                return m.clone();
+            }
+        }
+        self.matrix_builds.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("session_matrix_build_total").inc();
+        let built = Arc::new(perf_matrix(&self.trace, view));
+        let mut caches = self.caches.lock().unwrap();
+        caches.matrices.entry(view).or_insert(built).clone()
+    }
+
+    /// Per-region means of `view`, built at most once per session.
+    pub fn means(&self, view: MetricView) -> Arc<Vec<f64>> {
+        {
+            let caches = self.caches.lock().unwrap();
+            if let Some(m) = caches.means.get(&view) {
+                self.means_hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs_counter!("session_means_hit_total").inc();
+                return m.clone();
+            }
+        }
+        self.means_builds.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("session_means_build_total").inc();
+        let built = Arc::new(region_means(&self.trace, view));
+        let mut caches = self.caches.lock().unwrap();
+        caches.means.entry(view).or_insert(built).clone()
+    }
+
+    /// The backend's pairwise distance matrix over the `view` matrix,
+    /// built at most once per (backend, view).
+    pub fn distances(
+        &self,
+        backend: &dyn ClusterBackend,
+        view: MetricView,
+    ) -> Result<Arc<Matrix>> {
+        let key = (backend.name(), view);
+        {
+            let caches = self.caches.lock().unwrap();
+            if let Some(d) = caches.dists.get(&key) {
+                self.dist_hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs_counter!("session_dists_hit_total").inc();
+                return Ok(d.clone());
+            }
+        }
+        self.dist_builds.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("session_dists_build_total").inc();
+        let x = self.matrix(view);
+        let built = Arc::new(backend.pairwise_dists(&x)?);
+        let mut caches = self.caches.lock().unwrap();
+        Ok(caches.dists.entry(key).or_insert(built).clone())
+    }
+
+    /// Algorithm 1 clustering of the `view` matrix (the backend
+    /// supplies the distance matrix; both are memoized).
+    pub fn clustering(
+        &self,
+        backend: &dyn ClusterBackend,
+        view: MetricView,
+    ) -> Result<Arc<Clustering>> {
+        let key = (backend.name(), view);
+        {
+            let caches = self.caches.lock().unwrap();
+            if let Some(c) = caches.clusterings.get(&key) {
+                return Ok(c.clone());
+            }
+        }
+        let x = self.matrix(view);
+        let d = self.distances(backend, view)?;
+        let built = Arc::new(optics::simplified_optics_with(&x, &d, 1));
+        let mut caches = self.caches.lock().unwrap();
+        Ok(caches.clusterings.entry(key).or_insert(built).clone())
+    }
+
+    /// Five-band severity clustering of the `view` region means.
+    pub fn severity_kmeans(
+        &self,
+        backend: &dyn ClusterBackend,
+        view: MetricView,
+    ) -> Result<Arc<KmeansResult>> {
+        let key = (backend.name(), view);
+        {
+            let caches = self.caches.lock().unwrap();
+            if let Some(k) = caches.kmeans.get(&key) {
+                return Ok(k.clone());
+            }
+        }
+        let means = self.means(view);
+        let points: Vec<f32> = means.iter().map(|&m| m as f32).collect();
+        let built = Arc::new(backend.severity_kmeans(&points)?);
+        let mut caches = self.caches.lock().unwrap();
+        Ok(caches.kmeans.entry(key).or_insert(built).clone())
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            matrix_builds: self.matrix_builds.load(Ordering::Relaxed),
+            matrix_hits: self.matrix_hits.load(Ordering::Relaxed),
+            means_builds: self.means_builds.load(Ordering::Relaxed),
+            means_hits: self.means_hits.load(Ordering::Relaxed),
+            dist_builds: self.dist_builds.load(Ordering::Relaxed),
+            dist_hits: self.dist_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::metrics::Metric;
+    use crate::regions::{RegionId, RegionTree};
+
+    fn session() -> AnalysisSession {
+        let mut tree = RegionTree::new("s");
+        tree.add(RegionId(0), "a");
+        tree.add(RegionId(0), "b");
+        let mut t = Trace::new(tree, 3);
+        for p in 0..3 {
+            t.sample_mut(p, RegionId(0)).wall = 10.0;
+            t.sample_mut(p, RegionId(1)).cpu = 5.0 + p as f64;
+            t.sample_mut(p, RegionId(2)).cpu = 2.0;
+        }
+        AnalysisSession::from_trace(t)
+    }
+
+    #[test]
+    fn matrix_is_built_once_per_view() {
+        let s = session();
+        let view = MetricView::Plain(Metric::CpuClock);
+        let a = s.matrix(view);
+        let b = s.matrix(view);
+        assert!(Arc::ptr_eq(&a, &b), "second request must be the same matrix");
+        let stats = s.stats();
+        assert_eq!((stats.matrix_builds, stats.matrix_hits), (1, 1));
+        // A different view builds its own matrix.
+        let _ = s.matrix(MetricView::Crnm);
+        assert_eq!(s.stats().matrix_builds, 2);
+    }
+
+    #[test]
+    fn matrix_matches_direct_construction() {
+        let s = session();
+        let view = MetricView::Plain(Metric::CpuClock);
+        let cached = s.matrix(view);
+        let direct = perf_matrix(s.trace(), view);
+        assert_eq!(cached.max_abs_diff(&direct), 0.0);
+    }
+
+    #[test]
+    fn distances_and_clustering_are_memoized_per_backend() {
+        let s = session();
+        let view = MetricView::Plain(Metric::CpuClock);
+        let d1 = s.distances(&NativeBackend, view).unwrap();
+        let d2 = s.distances(&NativeBackend, view).unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2));
+        assert_eq!(s.stats().dist_builds, 1);
+        assert_eq!(s.stats().dist_hits, 1);
+        let c1 = s.clustering(&NativeBackend, view).unwrap();
+        let c2 = s.clustering(&NativeBackend, view).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2));
+        // clustering() reused the memoized matrix + distances.
+        assert_eq!(s.stats().matrix_builds, 1);
+        assert_eq!(s.stats().dist_builds, 1);
+        // And agrees with the backend's own entry point.
+        let direct = NativeBackend.simplified_optics(&s.matrix(view)).unwrap();
+        assert_eq!(*c1, direct);
+    }
+
+    #[test]
+    fn means_and_kmeans_are_memoized() {
+        let s = session();
+        let view = MetricView::Plain(Metric::CpuClock);
+        let m1 = s.means(view);
+        let m2 = s.means(view);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(*m1, region_means(s.trace(), view));
+        let k1 = s.severity_kmeans(&NativeBackend, view).unwrap();
+        let k2 = s.severity_kmeans(&NativeBackend, view).unwrap();
+        assert!(Arc::ptr_eq(&k1, &k2));
+        assert_eq!(s.stats().means_builds, 1);
+    }
+
+    #[test]
+    fn trace_is_shared_not_copied() {
+        let s = session();
+        let a = s.trace_arc();
+        let b = s.trace_arc();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -11,10 +11,12 @@ use crate::analysis::pipeline::{analyze, AnalysisConfig};
 use crate::cluster::ClusterBackend;
 use crate::trace::Trace;
 
-/// One unit of work: analyze a trace.
+/// One unit of work: analyze a trace. Jobs share the trace by
+/// reference counting — `submit` moves an `Arc`, never a copy of the
+/// sample columns, so enqueueing is O(1) regardless of trace size.
 pub struct AnalysisJob {
     pub id: u64,
-    pub trace: Trace,
+    pub trace: Arc<Trace>,
     pub config: AnalysisConfig,
 }
 
@@ -226,7 +228,7 @@ mod tests {
                 vec![]
             };
             let spec = synthetic(4, 6, &inj, i);
-            let trace = simulate(&spec, i);
+            let trace = Arc::new(simulate(&spec, i));
             coord.submit(AnalysisJob {
                 id: i,
                 trace,
@@ -257,7 +259,7 @@ mod tests {
             let spec = synthetic(4, 4, &[], i);
             coord.submit(AnalysisJob {
                 id: i,
-                trace: simulate(&spec, i),
+                trace: Arc::new(simulate(&spec, i)),
                 config: AnalysisConfig::default(),
             });
             assert!(coord.queued() <= 2);
@@ -266,6 +268,90 @@ mod tests {
             rx.recv().unwrap();
         }
         coord.shutdown();
+    }
+
+    /// Satellite regression: fill the bounded queue past `cap` while
+    /// the single worker is gated shut, assert the extra submitters
+    /// actually block, then open the gate and check the counters
+    /// reconcile after the drain.
+    #[test]
+    fn submitters_block_at_capacity_and_counters_reconcile() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let factory = move || {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
+        };
+        let cap = 3usize;
+        let (coord, rx) = Coordinator::start(1, cap, factory);
+        let coord = Arc::new(coord);
+        let trace = Arc::new(simulate(&synthetic(4, 4, &[], 7), 7));
+
+        // The worker can't pop anything yet, so exactly `cap` submits
+        // go through without blocking.
+        for i in 0..cap as u64 {
+            coord.submit(AnalysisJob {
+                id: i,
+                trace: trace.clone(),
+                config: AnalysisConfig::default(),
+            });
+        }
+        assert_eq!(coord.queued(), cap);
+
+        // Anything past the cap must park in `submit`.
+        let extra = 2u64;
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let mut submitters = Vec::new();
+        for i in 0..extra {
+            let c = coord.clone();
+            let t = trace.clone();
+            let dtx = done_tx.clone();
+            submitters.push(std::thread::spawn(move || {
+                c.submit(AnalysisJob {
+                    id: 100 + i,
+                    trace: t,
+                    config: AnalysisConfig::default(),
+                });
+                let _ = dtx.send(());
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(
+            done_rx.try_recv().is_err(),
+            "a submitter got past a full queue"
+        );
+        assert_eq!(coord.queued(), cap, "queue overflowed its bound");
+
+        // Open the gate: the worker drains, the parked submitters slot
+        // their jobs in, and every outcome arrives.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let total = cap as u64 + extra;
+        for _ in 0..total {
+            rx.recv().expect("outcome");
+        }
+        for h in submitters {
+            h.join().unwrap();
+        }
+        assert_eq!(coord.stats.submitted.load(Ordering::Relaxed), total);
+        assert_eq!(
+            coord.stats.completed.load(Ordering::Relaxed)
+                + coord.stats.failed.load(Ordering::Relaxed),
+            total
+        );
+        assert_eq!(coord.stats.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(coord.queued(), 0);
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown(),
+            Err(_) => panic!("coordinator still shared after joins"),
+        }
     }
 
     #[test]
@@ -281,7 +367,7 @@ mod tests {
             let spec = synthetic(4, 4, &[], i);
             coord.submit(AnalysisJob {
                 id: i,
-                trace: simulate(&spec, i),
+                trace: Arc::new(simulate(&spec, i)),
                 config: AnalysisConfig::default(),
             });
         }

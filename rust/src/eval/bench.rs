@@ -14,6 +14,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{percentile, Welford};
 use crate::util::tables::{human_secs, Table};
 
@@ -103,8 +104,42 @@ impl Bench {
     /// Bench report followed by the process-wide metrics dump, so a
     /// bench run doubles as an instrumentation smoke test (the pipeline
     /// and cluster counters it drove are visible next to its numbers).
+    /// Also honours `BENCH_JSON_OUT` (see [`Bench::write_json_summary`])
+    /// so every bench binary that prints this report exports its numbers
+    /// for CI without extra plumbing.
     pub fn report_with_metrics(&self) -> String {
+        self.write_json_summary();
         format!("{}\n{}", self.report(), crate::obs::render_prometheus())
+    }
+
+    /// When the `BENCH_JSON_OUT` env var names a directory, write
+    /// `<dir>/<bench-name>.json` with every case's numbers — the
+    /// machine-readable summary the CI bench-smoke job uploads as an
+    /// artifact. Returns the path written, or `None` when the variable
+    /// is unset or the write fails (benches never fail on summary IO).
+    pub fn write_json_summary(&self) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("BENCH_JSON_OUT").ok()?;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .push("case", Json::Str(r.name.clone()))
+                    .push("mean_s", Json::Num(r.mean))
+                    .push("std_s", Json::Num(r.std))
+                    .push("p50_s", Json::Num(r.p50))
+                    .push("p99_s", Json::Num(r.p99))
+                    .push("iters", Json::Num(r.iters as f64))
+            })
+            .collect();
+        let doc = Json::obj()
+            .push("bench", Json::Str(self.name.clone()))
+            .push("fast_mode", Json::Bool(fast_mode()))
+            .push("cases", Json::Arr(cases));
+        std::fs::create_dir_all(&dir).ok()?;
+        let path = std::path::Path::new(&dir).join(format!("{}.json", self.name));
+        std::fs::write(&path, doc.pretty()).ok()?;
+        Some(path)
     }
 
     pub fn results(&self) -> &[CaseResult] {
@@ -146,5 +181,24 @@ mod tests {
         let full = b.report_with_metrics();
         assert!(full.contains("bench_cases_total"));
         assert!(full.contains("bench_case_seconds"));
+    }
+
+    #[test]
+    fn json_summary_written_when_env_set() {
+        std::env::set_var("BENCH_FAST", "1");
+        let dir = std::env::temp_dir().join(format!("bench-json-{}", std::process::id()));
+        std::env::set_var("BENCH_JSON_OUT", &dir);
+        let mut b = Bench::new("json-demo");
+        b.run("spin", || std::hint::black_box(1u64.wrapping_add(1)));
+        let path = b.write_json_summary().expect("summary path");
+        std::env::remove_var("BENCH_JSON_OUT");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("json-demo"));
+        let cases = doc.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("case").and_then(Json::as_str), Some("spin"));
+        assert!(cases[0].get("mean_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -6,9 +6,12 @@
 //! shape no longer holds, so `cargo bench`/`reproduce` doubles as a
 //! regression harness for the reproduction itself.
 
+use std::sync::OnceLock;
+
 use anyhow::{ensure, Result};
 
-use crate::analysis::pipeline::{analyze, AnalysisConfig};
+use crate::analysis::pipeline::{analyze_session, AnalysisConfig};
+use crate::analysis::session::AnalysisSession;
 use crate::cluster::ClusterBackend;
 use crate::metrics::{region_series, Metric, MetricView};
 use crate::regions::RegionId;
@@ -60,8 +63,16 @@ pub fn run_experiment(id: &str, backend: &dyn ClusterBackend) -> Result<String> 
     )
 }
 
-fn st_trace() -> Trace {
-    simulate(&st_coarse(&StParams::default()), SEED)
+/// All coarse-ST experiments share one memoizing session: the trace is
+/// simulated once and every per-metric matrix / distance matrix /
+/// clustering is built at most once per backend across the whole
+/// registry run (the caches are backend-keyed, so native and PJRT
+/// results stay separate).
+fn st_session() -> &'static AnalysisSession {
+    static SESSION: OnceLock<AnalysisSession> = OnceLock::new();
+    SESSION.get_or_init(|| {
+        AnalysisSession::from_trace(simulate(&st_coarse(&StParams::default()), SEED))
+    })
 }
 
 fn ids(v: &[RegionId]) -> Vec<usize> {
@@ -70,8 +81,7 @@ fn ids(v: &[RegionId]) -> Vec<usize> {
 
 // --- E1: Fig. 9 ---------------------------------------------------------
 fn fig09(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let r = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::CpuClock))?;
+    let r = dissimilarity_search(st_session(), backend, MetricView::Plain(Metric::CpuClock))?;
     let mut out = String::from("# Fig. 9 — ST similarity analysis\n");
     out.push_str(&r.render());
     out.push_str(&format!(
@@ -92,8 +102,7 @@ fn fig09(backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E2: Table 3 + Fig. 10 ----------------------------------------------
 fn table3(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let report = analyze_session(st_session(), backend, &AnalysisConfig::default())?;
     let rc = report
         .dissimilarity_causes
         .as_ref()
@@ -115,8 +124,8 @@ fn table3(backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E3: Fig. 11 ---------------------------------------------------------
 fn fig11(_backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let series = region_series(&trace, RegionId(11), MetricView::Plain(Metric::Instructions));
+    let trace = st_session().trace();
+    let series = region_series(trace, RegionId(11), MetricView::Plain(Metric::Instructions));
     let mut t = Table::new(
         "Fig. 11 — instructions retired of code region 11",
         &["process", "instructions"],
@@ -138,8 +147,7 @@ fn fig11(_backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E4: Fig. 12 ---------------------------------------------------------
 fn fig12(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let r = disparity_search(&trace, backend, MetricView::Crnm)?;
+    let r = disparity_search(st_session(), backend, MetricView::Crnm)?;
     let mut out = String::from("# Fig. 12 — ST severity bands\n");
     out.push_str(&r.render());
     out.push_str(
@@ -158,8 +166,7 @@ fn fig12(backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E5: Fig. 13 / Fig. 21 ----------------------------------------------
 fn fig13(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let r = disparity_search(&trace, backend, MetricView::Crnm)?;
+    let r = disparity_search(st_session(), backend, MetricView::Crnm)?;
     let mut t = Table::new(
         "Fig. 13/21 — average CRNM of each ST code region",
         &["region", "crnm"],
@@ -177,8 +184,8 @@ fn fig13(backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E6: Table 4 ---------------------------------------------------------
 fn table4(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = st_trace();
-    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let trace = st_session().trace();
+    let report = analyze_session(st_session(), backend, &AnalysisConfig::default())?;
     let rc = report.disparity_causes.as_ref().expect("ST has disparity CCRs");
     let mut out = String::from("# Table 4 — disparity root cause\n");
     out.push_str(&rc.table.render("decision table (disparity)"));
@@ -256,13 +263,14 @@ fn fig14(_backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E8: Fig. 15 + 16 ----------------------------------------------------
 fn fig15_16(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = simulate(&st_fine(&StParams::default()), SEED);
-    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let session = AnalysisSession::from_trace(simulate(&st_fine(&StParams::default()), SEED));
+    let trace = session.trace();
+    let report = analyze_session(&session, backend, &AnalysisConfig::default())?;
     let mut out = String::from("# Fig. 15/16 — fine-grain ST (shots = 300)\n");
     out.push_str(&trace.tree.render());
     out.push_str(&report.dissimilarity.render());
     out.push_str(&report.disparity.render());
-    let series = region_series(&trace, RegionId(21), MetricView::Plain(Metric::Instructions));
+    let series = region_series(trace, RegionId(21), MetricView::Plain(Metric::Instructions));
     let mut t = Table::new(
         "Fig. 16 — instructions retired of code region 21",
         &["process", "instructions"],
@@ -292,8 +300,9 @@ fn fig15_16(backend: &dyn ClusterBackend) -> Result<String> {
 // --- E9: Fig. 17 + §6.2 --------------------------------------------------
 fn fig17(backend: &dyn ClusterBackend) -> Result<String> {
     let base = NparParams::default();
-    let trace = simulate(&npar1way(&base), SEED);
-    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let session = AnalysisSession::from_trace(simulate(&npar1way(&base), SEED));
+    let trace = session.trace();
+    let report = analyze_session(&session, backend, &AnalysisConfig::default())?;
     let mut out = String::from("# Fig. 17 + §6.2 — NPAR1WAY\n");
     out.push_str(&report.dissimilarity.render());
     let mut t = Table::new(
@@ -349,8 +358,9 @@ fn fig17(backend: &dyn ClusterBackend) -> Result<String> {
 
 // --- E10: Fig. 18 + 19 + §6.3 -------------------------------------------
 fn fig19(backend: &dyn ClusterBackend) -> Result<String> {
-    let trace = simulate(&mpibzip2::mpibzip2(), SEED);
-    let report = analyze(&trace, backend, &AnalysisConfig::default())?;
+    let session = AnalysisSession::from_trace(simulate(&mpibzip2::mpibzip2(), SEED));
+    let trace = session.trace();
+    let report = analyze_session(&session, backend, &AnalysisConfig::default())?;
     let mut out = String::from("# Fig. 18/19 + §6.3 — MPIBZIP2\n");
     out.push_str(&trace.tree.render());
     out.push_str(&report.dissimilarity.render());
@@ -415,7 +425,8 @@ fn fig20_23(backend: &dyn ClusterBackend) -> Result<String> {
     // the COARSE region tree — the study is about metrics, not grain.
     let mut params = StParams::default();
     params.shots = st::SHOTS_FINE;
-    let trace = simulate(&st_coarse(&params), SEED);
+    let session = AnalysisSession::from_trace(simulate(&st_coarse(&params), SEED));
+    let trace = session.trace();
 
     let mut out = String::from("# Fig. 20-23 + §6.4 — effect of metric choice\n");
 
@@ -443,8 +454,8 @@ fn fig20_23(backend: &dyn ClusterBackend) -> Result<String> {
     out.push_str(&t22.render());
 
     // Fig. 23: per-process wall/CPU of region 11.
-    let wall11 = region_series(&trace, RegionId(11), MetricView::Plain(Metric::WallClock));
-    let cpu11 = region_series(&trace, RegionId(11), MetricView::Plain(Metric::CpuClock));
+    let wall11 = region_series(trace, RegionId(11), MetricView::Plain(Metric::WallClock));
+    let cpu11 = region_series(trace, RegionId(11), MetricView::Plain(Metric::CpuClock));
     let mut t23 = Table::new(
         "Fig. 23 — wall vs CPU clock of region 11 per process",
         &["process", "wall (s)", "cpu (s)"],
@@ -454,10 +465,11 @@ fn fig20_23(backend: &dyn ClusterBackend) -> Result<String> {
     }
     out.push_str(&t23.render());
 
-    // The detector comparison.
-    let crnm = disparity_search(&trace, backend, MetricView::Crnm)?;
-    let wallm = disparity_search(&trace, backend, MetricView::Plain(Metric::WallClock))?;
-    let cpim = disparity_search(&trace, backend, MetricView::Plain(Metric::Cpi))?;
+    // The detector comparison (one session: the three searches share
+    // the trace and each view's means/k-means are built once).
+    let crnm = disparity_search(&session, backend, MetricView::Crnm)?;
+    let wallm = disparity_search(&session, backend, MetricView::Plain(Metric::WallClock))?;
+    let cpim = disparity_search(&session, backend, MetricView::Plain(Metric::Cpi))?;
     let mut cmp = Table::new(
         "§6.4 — disparity bottlenecks found per metric",
         &["metric", "flagged regions", "paper"],
@@ -475,8 +487,8 @@ fn fig20_23(backend: &dyn ClusterBackend) -> Result<String> {
     out.push_str(&cmp.render());
 
     // Dissimilarity: wall vs CPU clock.
-    let dis_cpu = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::CpuClock))?;
-    let dis_wall = dissimilarity_search(&trace, backend, MetricView::Plain(Metric::WallClock))?;
+    let dis_cpu = dissimilarity_search(&session, backend, MetricView::Plain(Metric::CpuClock))?;
+    let dis_wall = dissimilarity_search(&session, backend, MetricView::Plain(Metric::WallClock))?;
     out.push_str(&format!(
         "dissimilarity detection: cpu -> {} clusters {:?}; wall -> {} clusters {:?}\n\
          [paper: both metrics detect the imbalance identically; our wall-clock run\n\

@@ -8,6 +8,27 @@
 //! and disparity bottlenecks (`cluster`, `search`), and uncover their
 //! root causes with rough set theory (`roughset`, `analysis`).
 //!
+//! # Data plane
+//!
+//! The trace store is *columnar*: a [`trace::Trace`] holds one
+//! contiguous `Vec<f32>` per raw metric ([`trace::MetricColumn`],
+//! process-major, `data[p * width + r]`), so building a performance
+//! matrix for one metric is a sequential scan of a single allocation
+//! instead of a strided walk over an array of structs. Row-style access
+//! survives as thin views: [`trace::Trace::sample`] assembles a
+//! [`trace::RegionSample`] by value and
+//! [`trace::Trace::sample_mut`] returns a write-back guard.
+//!
+//! Analysis passes share that store without copying it:
+//! [`analysis::session::AnalysisSession`] owns an `Arc<Trace>` and
+//! memoizes every `MetricView` performance matrix, mean vector,
+//! distance matrix and clustering across the dissimilarity search, the
+//! disparity search, the rough-set stage and the evaluation harness —
+//! within one [`analysis::pipeline::analyze`] call each matrix is built
+//! exactly once (asserted via the `session_*_{build,hit}_total` obs
+//! counters). [`coordinator`] jobs carry the same `Arc<Trace>`, so
+//! submitting a job is an `Arc` bump, not a deep copy.
+//!
 //! The clustering hot spot executes JAX/Pallas AOT artifacts through
 //! PJRT (`runtime`, `cluster::PjrtBackend`) with a numerically equivalent
 //! native fallback (`cluster::NativeBackend`). The `obs` module is the

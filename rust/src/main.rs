@@ -12,6 +12,7 @@
 //! (default) uses the PJRT artifacts when `artifacts/` exists and falls
 //! back to native otherwise.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -154,7 +155,7 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
 fn cmd_analyze(args: &Args) -> Result<()> {
     let spec = build_workload(args)?;
     let seed = args.u64_or("seed", 2011)?;
-    let trace = simulate(&spec, seed);
+    let trace = Arc::new(simulate(&spec, seed));
     if let Some(path) = args.str_opt("save-trace") {
         json_codec::save(&trace, std::path::Path::new(path))?;
         autoanalyzer::log_info!("trace saved to {path}");
@@ -177,7 +178,7 @@ fn cmd_analyze_trace(args: &Args) -> Result<()> {
     let path = args
         .positional(1)
         .context("usage: autoanalyzer analyze-trace <FILE>")?;
-    let trace = load_trace(path)?;
+    let trace = Arc::new(load_trace(path)?);
     let backend = select_backend(
         args.str_or("backend", "auto"),
         args.str_or("artifacts", "artifacts"),
@@ -232,7 +233,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     let spec = synthetic(8, 12, &inj, i);
                     AnalysisJob {
                         id: i,
-                        trace: simulate(&spec, i),
+                        trace: Arc::new(simulate(&spec, i)),
                         config: AnalysisConfig::default(),
                     }
                 })

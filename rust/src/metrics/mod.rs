@@ -9,5 +9,5 @@
 pub mod sample;
 pub mod vectors;
 
-pub use sample::{Metric, RegionSample};
+pub use sample::{Metric, RegionSample, RAW_METRICS};
 pub use vectors::{perf_matrix, region_means, region_series, MetricView};

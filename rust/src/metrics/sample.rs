@@ -27,7 +27,48 @@ pub enum Metric {
     Crnm,
 }
 
+/// The eleven directly-collected metrics in canonical column order.
+/// This order defines the `MetricColumn` layout of `trace::Trace` and
+/// the field order of both codecs — append-only, never reorder.
+pub const RAW_METRICS: [Metric; 11] = [
+    Metric::WallClock,
+    Metric::CpuClock,
+    Metric::Cycles,
+    Metric::Instructions,
+    Metric::L1Miss,
+    Metric::L1Access,
+    Metric::L2Miss,
+    Metric::L2Access,
+    Metric::MpiTime,
+    Metric::MpiBytes,
+    Metric::DiskBytes,
+];
+
 impl Metric {
+    /// Position of a raw metric in [`RAW_METRICS`] (and therefore in the
+    /// columnar trace store); `None` for derived metrics, which have no
+    /// column of their own.
+    pub fn raw_index(self) -> Option<usize> {
+        match self {
+            Metric::WallClock => Some(0),
+            Metric::CpuClock => Some(1),
+            Metric::Cycles => Some(2),
+            Metric::Instructions => Some(3),
+            Metric::L1Miss => Some(4),
+            Metric::L1Access => Some(5),
+            Metric::L2Miss => Some(6),
+            Metric::L2Access => Some(7),
+            Metric::MpiTime => Some(8),
+            Metric::MpiBytes => Some(9),
+            Metric::DiskBytes => Some(10),
+            _ => None,
+        }
+    }
+
+    pub fn is_raw(self) -> bool {
+        self.raw_index().is_some()
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Metric::WallClock => "wall_clock",
@@ -146,6 +187,42 @@ impl RegionSample {
         }
     }
 
+    /// Read a field by raw column index ([`RAW_METRICS`] order).
+    pub fn raw(&self, idx: usize) -> f64 {
+        match idx {
+            0 => self.wall,
+            1 => self.cpu,
+            2 => self.cycles,
+            3 => self.instructions,
+            4 => self.l1_miss,
+            5 => self.l1_access,
+            6 => self.l2_miss,
+            7 => self.l2_access,
+            8 => self.mpi_time,
+            9 => self.mpi_bytes,
+            10 => self.disk_bytes,
+            other => panic!("raw metric index {other} out of range"),
+        }
+    }
+
+    /// Write a field by raw column index ([`RAW_METRICS`] order).
+    pub fn set_raw(&mut self, idx: usize, v: f64) {
+        match idx {
+            0 => self.wall = v,
+            1 => self.cpu = v,
+            2 => self.cycles = v,
+            3 => self.instructions = v,
+            4 => self.l1_miss = v,
+            5 => self.l1_access = v,
+            6 => self.l2_miss = v,
+            7 => self.l2_access = v,
+            8 => self.mpi_time = v,
+            9 => self.mpi_bytes = v,
+            10 => self.disk_bytes = v,
+            other => panic!("raw metric index {other} out of range"),
+        }
+    }
+
     /// Accumulate another sample into this one (used when merging
     /// composite code regions for Algorithm 2's fallback, and when
     /// aggregating children into a parent).
@@ -230,6 +307,29 @@ mod tests {
         assert_eq!(a.instructions, 16e9);
         // CPI invariant under uniform scaling.
         assert!((a.cpi() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raw_index_matches_raw_metrics_order() {
+        for (i, m) in RAW_METRICS.iter().enumerate() {
+            assert_eq!(m.raw_index(), Some(i), "{}", m.name());
+            assert!(m.is_raw());
+        }
+        assert_eq!(Metric::Crnm.raw_index(), None);
+        assert_eq!(Metric::L1MissRate.raw_index(), None);
+        assert!(!Metric::Cpi.is_raw());
+    }
+
+    #[test]
+    fn raw_accessors_cover_every_field() {
+        let s = sample();
+        let mut copy = RegionSample::default();
+        for i in 0..RAW_METRICS.len() {
+            copy.set_raw(i, s.raw(i));
+        }
+        assert_eq!(copy, s);
+        assert_eq!(s.raw(0), s.wall);
+        assert_eq!(s.raw(10), s.disk_bytes);
     }
 
     #[test]

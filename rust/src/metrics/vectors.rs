@@ -5,6 +5,11 @@
 //! process are zeroed (the paper excludes them from similarity
 //! analysis); regions absent from a process's call path are naturally
 //! zero.
+//!
+//! All three assemblers scan the trace's contiguous metric columns
+//! directly — for a raw metric, `perf_matrix` degenerates to one
+//! `copy_from_slice` per process row; derived metrics (miss rates,
+//! CPI, CRNM) are computed element-wise from two or three columns.
 
 use crate::metrics::{Metric, RegionSample};
 use crate::regions::RegionId;
@@ -13,7 +18,8 @@ use crate::util::matrix::Matrix;
 
 /// A metric selector that knows how to resolve context-dependent
 /// metrics (CRNM needs the whole-program wall time of the process).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// `Eq + Hash` so `AnalysisSession` can memoize per-view artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MetricView {
     Plain(Metric),
     /// Equation (2): (CRWT / WPWT) * CPI.
@@ -36,6 +42,57 @@ impl MetricView {
     }
 }
 
+/// Evaluate `view` for every region of process `p` into `out`
+/// (index `r-1` holds region id `r`), reading metric columns directly.
+fn fill_proc(trace: &Trace, view: MetricView, p: usize, out: &mut [f64]) {
+    match view {
+        MetricView::Plain(m) if m.is_raw() => {
+            let row = trace.column(m).proc_row(p);
+            for (o, v) in out.iter_mut().zip(&row[1..]) {
+                *o = *v as f64;
+            }
+        }
+        MetricView::Plain(Metric::L1MissRate) => {
+            fill_ratio(trace, Metric::L1Miss, Metric::L1Access, p, out)
+        }
+        MetricView::Plain(Metric::L2MissRate) => {
+            fill_ratio(trace, Metric::L2Miss, Metric::L2Access, p, out)
+        }
+        MetricView::Plain(Metric::Cpi) => {
+            fill_ratio(trace, Metric::Cycles, Metric::Instructions, p, out)
+        }
+        MetricView::Plain(_) => {
+            panic!("CRNM needs program wall time; use MetricView::Crnm")
+        }
+        MetricView::Crnm => {
+            let wall = trace.column(Metric::WallClock).proc_row(p);
+            let cyc = trace.column(Metric::Cycles).proc_row(p);
+            let ins = trace.column(Metric::Instructions).proc_row(p);
+            let wpwt = wall[0] as f64;
+            for (r, o) in out.iter_mut().enumerate() {
+                let i = ins[r + 1] as f64;
+                let cpi = if i <= 0.0 { 0.0 } else { cyc[r + 1] as f64 / i };
+                *o = if wpwt <= 0.0 {
+                    0.0
+                } else {
+                    (wall[r + 1] as f64 / wpwt) * cpi
+                };
+            }
+        }
+    }
+}
+
+/// `out[r-1] = num[r] / den[r]` with the same zero-denominator guard
+/// as the `RegionSample` derived accessors.
+fn fill_ratio(trace: &Trace, num: Metric, den: Metric, p: usize, out: &mut [f64]) {
+    let num = trace.column(num).proc_row(p);
+    let den = trace.column(den).proc_row(p);
+    for (r, o) in out.iter_mut().enumerate() {
+        let d = den[r + 1] as f64;
+        *o = if d <= 0.0 { 0.0 } else { num[r + 1] as f64 / d };
+    }
+}
+
 /// Build the m x n performance matrix (process rows, region columns,
 /// region ids 1..=n map to columns 0..n-1). Master-process management
 /// regions are zeroed.
@@ -43,36 +100,60 @@ pub fn perf_matrix(trace: &Trace, view: MetricView) -> Matrix {
     let m = trace.nprocs();
     let n = trace.nregions();
     let mut out = Matrix::zeros(m, n);
-    for p in 0..m {
-        let wpwt = trace.program_wall(p);
-        for r in 1..=n {
-            if trace.excluded(p, RegionId(r)) {
-                continue;
+    if let MetricView::Plain(metric) = view {
+        if metric.is_raw() {
+            // Fast path: the matrix row IS the column's process row
+            // minus the root cell.
+            let col = trace.column(metric);
+            for p in 0..m {
+                out.row_mut(p).copy_from_slice(&col.proc_row(p)[1..]);
             }
-            out[(p, r - 1)] = view.value(trace.sample(p, RegionId(r)), wpwt) as f32;
+            zero_excluded(trace, &mut out);
+            return out;
         }
     }
+    let mut scratch = vec![0.0f64; n];
+    for p in 0..m {
+        fill_proc(trace, view, p, &mut scratch);
+        for (o, v) in out.row_mut(p).iter_mut().zip(&scratch) {
+            *o = *v as f32;
+        }
+    }
+    zero_excluded(trace, &mut out);
     out
+}
+
+fn zero_excluded(trace: &Trace, out: &mut Matrix) {
+    if let Some(master) = trace.master_rank {
+        for r in 1..=trace.nregions() {
+            if trace.excluded(master, RegionId(r)) {
+                out[(master, r - 1)] = 0.0;
+            }
+        }
+    }
 }
 
 /// Per-region mean of a metric across all processes (the disparity
 /// analysis averages "among all processes or threads", §4.2.2).
 pub fn region_means(trace: &Trace, view: MetricView) -> Vec<f64> {
     let m = trace.nprocs().max(1);
-    (1..=trace.nregions())
-        .map(|r| {
-            (0..trace.nprocs())
-                .map(|p| view.value(trace.sample(p, RegionId(r)), trace.program_wall(p)))
-                .sum::<f64>()
-                / m as f64
-        })
-        .collect()
+    let n = trace.nregions();
+    let mut sums = vec![0.0f64; n];
+    let mut scratch = vec![0.0f64; n];
+    for p in 0..trace.nprocs() {
+        fill_proc(trace, view, p, &mut scratch);
+        for (s, v) in sums.iter_mut().zip(&scratch) {
+            *s += *v;
+        }
+    }
+    sums.iter_mut().for_each(|s| *s /= m as f64);
+    sums
 }
 
 /// Per-process values of one region (Fig. 11 / Fig. 23-style series).
 pub fn region_series(trace: &Trace, region: RegionId, view: MetricView) -> Vec<f64> {
     (0..trace.nprocs())
-        .map(|p| view.value(trace.sample(p, region), trace.program_wall(p)))
+        .map(|p| view.value(&trace.sample(p, region), trace.program_wall(p)))
         .collect()
 }
 
@@ -89,12 +170,13 @@ mod tests {
         t.master_rank = Some(0);
         for p in 0..2 {
             t.sample_mut(p, RegionId(0)).wall = 100.0;
-            let s1 = t.sample_mut(p, RegionId(1));
+            let mut s1 = t.sample_mut(p, RegionId(1));
             s1.wall = 50.0;
             s1.cpu = 40.0 + p as f64;
             s1.cycles = 2e9;
             s1.instructions = 1e9;
-            let s2 = t.sample_mut(p, RegionId(2));
+            drop(s1);
+            let mut s2 = t.sample_mut(p, RegionId(2));
             s2.cpu = 7.0;
             s2.wall = 8.0;
             s2.cycles = 1e9;
@@ -126,6 +208,29 @@ mod tests {
         let m = perf_matrix(&t, MetricView::Crnm);
         // region 1: (50/100) * (2e9/1e9) = 1.0 — for both processes.
         assert!((m[(0, 0)] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn derived_views_match_sample_math() {
+        let t = trace();
+        for view in [
+            MetricView::Plain(Metric::L1MissRate),
+            MetricView::Plain(Metric::L2MissRate),
+            MetricView::Plain(Metric::Cpi),
+            MetricView::Crnm,
+        ] {
+            let m = perf_matrix(&t, view);
+            for p in 0..t.nprocs() {
+                for r in 1..=t.nregions() {
+                    if t.excluded(p, RegionId(r)) {
+                        continue;
+                    }
+                    let want =
+                        view.value(&t.sample(p, RegionId(r)), t.program_wall(p)) as f32;
+                    assert_eq!(m[(p, r - 1)], want, "{} p{p} r{r}", view.name());
+                }
+            }
+        }
     }
 
     #[test]

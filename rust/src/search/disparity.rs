@@ -6,18 +6,21 @@
 //! CCR is a CCCR; a non-leaf CCR whose severity exceeds every child's
 //! is a CCCR.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::analysis::session::AnalysisSession;
 use crate::cluster::kmeans::Severity;
 use crate::cluster::{ClusterBackend, KmeansResult};
-use crate::metrics::{region_means, MetricView};
+use crate::metrics::MetricView;
 use crate::regions::RegionId;
-use crate::trace::Trace;
 
 #[derive(Debug, Clone)]
 pub struct DisparityResult {
-    /// Mean metric value per region (index = region id - 1).
-    pub means: Vec<f64>,
+    /// Mean metric value per region (index = region id - 1), shared
+    /// with the session cache.
+    pub means: Arc<Vec<f64>>,
     pub kmeans: KmeansResult,
     pub ccrs: Vec<RegionId>,
     pub cccrs: Vec<RegionId>,
@@ -60,13 +63,13 @@ impl DisparityResult {
 /// Run the disparity analysis with a chosen metric view (CRNM for the
 /// paper's main results; CPI / wall clock for the §6.4 metric study).
 pub fn disparity_search(
-    trace: &Trace,
+    session: &AnalysisSession,
     backend: &dyn ClusterBackend,
     view: MetricView,
 ) -> Result<DisparityResult> {
-    let means = region_means(trace, view);
-    let points: Vec<f32> = means.iter().map(|&m| m as f32).collect();
-    let kmeans = backend.severity_kmeans(&points)?;
+    let trace = session.trace();
+    let means = session.means(view);
+    let kmeans = (*session.severity_kmeans(backend, view)?).clone();
 
     let ccrs: Vec<RegionId> = trace
         .tree
@@ -105,6 +108,7 @@ mod tests {
     use super::*;
     use crate::cluster::NativeBackend;
     use crate::regions::RegionTree;
+    use crate::trace::Trace;
 
     /// Tree: 1..4 flat; 5 parent of 6; CRNM-like values make 5 & 6
     /// dominant with 6 the hotter child.
@@ -120,7 +124,7 @@ mod tests {
         for proc in 0..2 {
             t.sample_mut(proc, RegionId(0)).wall = 100.0;
             for &(r, v) in vals {
-                let s = t.sample_mut(proc, RegionId(r));
+                let mut s = t.sample_mut(proc, RegionId(r));
                 // Arrange wall & instructions so crnm == v:
                 // crnm = (wall/100) * (cycles/instr); set cycles=instr
                 // (cpi=1) and wall = v*100.
@@ -142,7 +146,9 @@ mod tests {
             (5, 0.45),
             (6, 0.42),
         ]);
-        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        let r =
+            disparity_search(&AnalysisSession::from_trace(t), &NativeBackend, MetricView::Crnm)
+                .unwrap();
         assert!(r.exists());
         assert!(r.ccrs.contains(&RegionId(5)));
         assert!(r.ccrs.contains(&RegionId(6)));
@@ -162,7 +168,9 @@ mod tests {
             (5, 0.5),
             (6, 0.04),
         ]);
-        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        let r =
+            disparity_search(&AnalysisSession::from_trace(t), &NativeBackend, MetricView::Crnm)
+                .unwrap();
         assert!(r.ccrs.contains(&RegionId(5)));
         assert!(r.cccrs.contains(&RegionId(5)));
     }
@@ -177,7 +185,9 @@ mod tests {
             (5, 0.1),
             (6, 0.1),
         ]);
-        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        let r =
+            disparity_search(&AnalysisSession::from_trace(t), &NativeBackend, MetricView::Crnm)
+                .unwrap();
         assert!(!r.exists(), "{:?}", r.kmeans.severities);
     }
 
@@ -191,7 +201,9 @@ mod tests {
             (5, 0.45),
             (6, 0.42),
         ]);
-        let r = disparity_search(&t, &NativeBackend, MetricView::Crnm).unwrap();
+        let r =
+            disparity_search(&AnalysisSession::from_trace(t), &NativeBackend, MetricView::Crnm)
+                .unwrap();
         let text = r.render();
         assert!(text.contains("very high: code regions:"));
         assert!(text.contains("CCCR:"));

@@ -16,11 +16,14 @@
 //! PJRT backend this loop is what drives the Pallas pairwise-distance
 //! artifact (the hot path the coordinator batches).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::analysis::session::AnalysisSession;
 use crate::cluster::optics::Clustering;
 use crate::cluster::ClusterBackend;
-use crate::metrics::{perf_matrix, MetricView};
+use crate::metrics::MetricView;
 use crate::regions::RegionId;
 use crate::trace::Trace;
 use crate::util::matrix::Matrix;
@@ -78,7 +81,9 @@ struct Searcher<'a> {
     trace: &'a Trace,
     /// Working matrix (columns r-1 for region id r).
     work: Matrix,
-    backup: Matrix,
+    /// The untouched full matrix, shared with the session cache —
+    /// probes read restore values from here without copying it.
+    backup: Arc<Matrix>,
     baseline: Clustering,
     reclusters: usize,
     /// Incremental state (EXPERIMENTS.md §Perf change 2): squared
@@ -214,16 +219,19 @@ impl<'a> Searcher<'a> {
 
 /// Run the §4.2.1 existence test + Algorithm 2.
 pub fn dissimilarity_search(
-    trace: &Trace,
+    session: &AnalysisSession,
     backend: &dyn ClusterBackend,
     view: MetricView,
 ) -> Result<DissimilarityResult> {
-    let full = perf_matrix(trace, view);
-    let clustering = backend.simplified_optics(&full)?;
+    let trace = session.trace();
+    let full = session.matrix(view);
+    let clustering = (*session.clustering(backend, view)?).clone();
     let mut reclusters = 1usize;
 
-    // Build the Algorithm 2 working matrix: deep regions zeroed.
-    let mut work = full.clone();
+    // Build the Algorithm 2 working matrix: deep regions zeroed. This
+    // is the one deliberate copy — probes mutate it in place while
+    // `full` stays shared with the session.
+    let mut work = (*full).clone();
     let deep: Vec<RegionId> = trace
         .tree
         .region_ids()
@@ -342,8 +350,12 @@ mod tests {
     #[test]
     fn locates_nested_bottleneck() {
         let t = skewed_trace();
-        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
-            .unwrap();
+        let r = dissimilarity_search(
+            &AnalysisSession::from_trace(t),
+            &NativeBackend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap();
         assert!(r.exists());
         assert!(r.ccrs.contains(&RegionId(2)), "parent flagged: {:?}", r.ccrs);
         assert!(r.ccrs.contains(&RegionId(3)), "child flagged: {:?}", r.ccrs);
@@ -361,8 +373,12 @@ mod tests {
             t.sample_mut(p, RegionId(1)).cpu = 100.0;
             t.sample_mut(p, RegionId(2)).cpu = 50.0;
         }
-        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
-            .unwrap();
+        let r = dissimilarity_search(
+            &AnalysisSession::from_trace(t),
+            &NativeBackend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap();
         assert!(!r.exists());
         assert!(r.ccrs.is_empty());
         assert!(r.cccrs.is_empty());
@@ -384,8 +400,12 @@ mod tests {
             t.sample_mut(p, RegionId(3)).cpu = 100.0 + extra;
             t.sample_mut(p, RegionId(4)).cpu = 1000.0;
         }
-        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
-            .unwrap();
+        let r = dissimilarity_search(
+            &AnalysisSession::from_trace(t),
+            &NativeBackend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap();
         if r.exists() {
             // Either single-region search or the composite fallback must
             // locate something covering regions 2 and 3.
@@ -400,8 +420,12 @@ mod tests {
     #[test]
     fn render_mentions_cccr() {
         let t = skewed_trace();
-        let r = dissimilarity_search(&t, &NativeBackend, MetricView::Plain(Metric::CpuClock))
-            .unwrap();
+        let r = dissimilarity_search(
+            &AnalysisSession::from_trace(t),
+            &NativeBackend,
+            MetricView::Plain(Metric::CpuClock),
+        )
+        .unwrap();
         let text = r.render();
         assert!(text.contains("clusters of processes"));
         assert!(text.contains("CCCR: code region 3"));

@@ -114,7 +114,7 @@ pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
                 .net_time(net_bytes, w.net_msgs_per_unit * units)
                 + coord_msgs * dyn_overhead;
 
-            let s = trace.sample_mut(p, RegionId(id));
+            let mut s = trace.sample_mut(p, RegionId(id));
             s.instructions = instr;
             s.cycles = cycles;
             s.cpu = cpu;
@@ -145,7 +145,7 @@ pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
                 continue;
             }
             for p in 0..spec.nprocs {
-                let child = *trace.sample(p, RegionId(id));
+                let child = trace.sample(p, RegionId(id));
                 trace.sample_mut(p, RegionId(parent)).add(&child);
             }
         }
@@ -194,7 +194,7 @@ pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
                 for &p in &execs {
                     let wait = latest - clock[p];
                     if wait > 0.0 {
-                        let s = trace.sample_mut(p, RegionId(id));
+                        let mut s = trace.sample_mut(p, RegionId(id));
                         s.wall += wait;
                         s.mpi_time += wait;
                         clock[p] = latest;
@@ -215,7 +215,7 @@ pub fn simulate(spec: &WorkloadSpec, seed: u64) -> Trace {
         let finalize_wait = finale - clock[p];
         total.wall += finalize_wait;
         total.mpi_time += finalize_wait;
-        *trace.sample_mut(p, RegionId(0)) = total;
+        trace.set_sample(p, RegionId(0), &total);
     }
 
     debug_assert!(trace.validate().is_ok());
@@ -284,10 +284,12 @@ mod tests {
         // The barrier charges rank 0 the wait: wall >> cpu in region 2.
         let s0 = t.sample(0, RegionId(2));
         assert!(s0.wall > s0.cpu + 1.0, "wall {} cpu {}", s0.wall, s0.cpu);
-        // Program wall is (nearly) equal across ranks after finalize.
+        // Program wall is (nearly) equal across ranks after finalize
+        // (per-region cells are stored as f32, so allow its noise
+        // floor rather than f64's).
         let w0 = t.program_wall(0);
         let w3 = t.program_wall(3);
-        assert!((w0 - w3).abs() / w3 < 1e-9);
+        assert!((w0 - w3).abs() / w3 < 1e-5, "w0 {w0} w3 {w3}");
     }
 
     #[test]
@@ -309,7 +311,9 @@ mod tests {
         ));
         let t = simulate(&w, 3);
         let sum = t.sample(0, RegionId(2)).instructions + t.sample(0, RegionId(3)).instructions;
-        assert!((t.sample(0, RegionId(1)).instructions - sum).abs() < 1.0);
+        // Relative tolerance at the f32 column noise floor (instruction
+        // counts are ~1e8, far past f32's 24-bit integer range).
+        assert!((t.sample(0, RegionId(1)).instructions - sum).abs() / sum < 1e-6);
         // Root ≈ outer.
         assert!((t.program_wall(0) - t.sample(0, RegionId(1)).wall).abs() < 1e-9);
     }
@@ -369,7 +373,9 @@ mod tests {
         let t = simulate(&w, 1);
         let s = t.sample(0, RegionId(1));
         let expected = cache::outcome(&prof, &Machine::testbed_a());
-        assert!((s.l2_miss_rate() - expected.l2_miss_rate).abs() < 1e-9);
+        // The miss/access columns are f32, so the recovered rate is
+        // exact to ~1e-7 relative, not f64-exact.
+        assert!((s.l2_miss_rate() - expected.l2_miss_rate).abs() < 1e-6);
         // CPI grows past base because of stalls.
         assert!(s.cpi() > 0.8);
     }

@@ -65,7 +65,7 @@ pub fn to_json(trace: &Trace) -> Json {
     let procs: Vec<Json> = (0..trace.nprocs())
         .map(|p| {
             let samples: Vec<Json> = (0..=trace.nregions())
-                .map(|r| sample_to_json(trace.sample(p, RegionId(r))))
+                .map(|r| sample_to_json(&trace.sample(p, RegionId(r))))
                 .collect();
             Json::obj()
                 .push("rank", Json::Num(p as f64))
@@ -149,8 +149,9 @@ pub fn from_json(v: &Json) -> Result<Trace> {
             );
         }
         for (r, sv) in samples.iter().enumerate() {
-            *trace.sample_mut(p, RegionId(r)) =
+            let s =
                 sample_from_json(sv).with_context(|| format!("process {p} region {r}"))?;
+            trace.set_sample(p, RegionId(r), &s);
         }
     }
     trace.master_rank = v.get("master_rank").and_then(Json::as_usize);
@@ -190,7 +191,7 @@ mod tests {
         t.set_meta("seed", "42");
         for p in 0..3 {
             for r in 0..=3 {
-                let s = t.sample_mut(p, RegionId(r));
+                let mut s = t.sample_mut(p, RegionId(r));
                 s.wall = (p * 10 + r) as f64 + 0.5;
                 s.cpu = s.wall * 0.9;
                 s.instructions = 1e9 * (r as f64 + 1.0);

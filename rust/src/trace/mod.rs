@@ -4,9 +4,15 @@
 //! as XML; we keep JSON as the primary on-disk format (diff-friendly,
 //! parsed by `util::json`) and provide the paper's XML as an alternate
 //! codec for fidelity.
+//!
+//! Storage is columnar (struct-of-arrays): one contiguous `f32`
+//! [`schema::MetricColumn`] per raw metric, process-major, so analysis
+//! passes scan whole columns instead of hopping across per-sample
+//! structs. [`schema::Trace::sample`]/[`schema::Trace::sample_mut`]
+//! keep the row-of-structs view for producers.
 
 pub mod schema;
 pub mod json_codec;
 pub mod xml_codec;
 
-pub use schema::Trace;
+pub use schema::{MetricColumn, SampleMut, Trace};

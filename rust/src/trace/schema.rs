@@ -1,16 +1,79 @@
-//! The in-memory trace: one `RegionSample` per (process, region), plus
-//! the region tree and run metadata.
+//! The in-memory trace, stored column-major: one contiguous `f32`
+//! column per raw metric (struct-of-arrays), plus the region tree and
+//! run metadata.
+//!
+//! Layout: each [`MetricColumn`] holds `nprocs * width` cells where
+//! `width = nregions + 1`; cell `(p, r)` lives at `p * width + r`
+//! (process-major), and index 0 within a process row is the whole
+//! program (the root region). Analysis consumers scan whole columns —
+//! `metrics::perf_matrix` is a near-memcpy for raw metrics — while the
+//! simulator and codecs keep the row-of-structs view through
+//! [`Trace::sample`] / [`Trace::sample_mut`], which assemble and
+//! write back [`RegionSample`]s on the fly.
 
-use crate::metrics::RegionSample;
+use std::ops::{Deref, DerefMut};
+
+use crate::metrics::{Metric, RegionSample, RAW_METRICS};
 use crate::regions::{RegionId, RegionTree};
+
+/// One contiguous per-metric column of a trace: `nprocs * width` cells
+/// of `f32`, process-major (`cell(p, r) = p * width + r`).
+#[derive(Debug, Clone)]
+pub struct MetricColumn {
+    metric: Metric,
+    /// Cells per process: number of regions + 1 (index 0 = root).
+    width: usize,
+    data: Vec<f32>,
+}
+
+impl MetricColumn {
+    fn new(metric: Metric, nprocs: usize, width: usize) -> MetricColumn {
+        MetricColumn {
+            metric,
+            width,
+            data: vec![0.0; nprocs * width],
+        }
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Cells per process (regions + 1; index 0 is the root region).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The whole column, process-major.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// One process's contiguous row of cells (root at index 0).
+    pub fn proc_row(&self, proc: usize) -> &[f32] {
+        &self.data[proc * self.width..(proc + 1) * self.width]
+    }
+
+    #[inline]
+    pub fn get(&self, proc: usize, region: usize) -> f32 {
+        self.data[proc * self.width + region]
+    }
+
+    #[inline]
+    fn set(&mut self, proc: usize, region: usize, v: f32) {
+        self.data[proc * self.width + region] = v;
+    }
+}
 
 /// A complete performance trace of one SPMD run.
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub tree: RegionTree,
-    /// `samples[p][r]` = measurements of region id `r` in process `p`.
-    /// Index 0 is the whole program (the root region).
-    samples: Vec<Vec<RegionSample>>,
+    nprocs: usize,
+    /// Cells per process in every column (`nregions + 1`).
+    width: usize,
+    /// One column per entry of `metrics::RAW_METRICS`, same order.
+    cols: Vec<MetricColumn>,
     /// Rank of the master process, if the application has one whose
     /// management regions must be excluded from similarity analysis.
     pub master_rank: Option<usize>,
@@ -21,33 +84,92 @@ pub struct Trace {
 impl Trace {
     pub fn new(tree: RegionTree, nprocs: usize) -> Trace {
         let width = tree.len() + 1;
+        let cols = RAW_METRICS
+            .iter()
+            .map(|&m| MetricColumn::new(m, nprocs, width))
+            .collect();
         Trace {
             tree,
-            samples: vec![vec![RegionSample::default(); width]; nprocs],
+            nprocs,
+            width,
+            cols,
             master_rank: None,
             meta: Vec::new(),
         }
     }
 
     pub fn nprocs(&self) -> usize {
-        self.samples.len()
+        self.nprocs
     }
 
     pub fn nregions(&self) -> usize {
         self.tree.len()
     }
 
-    pub fn sample(&self, proc: usize, region: RegionId) -> &RegionSample {
-        &self.samples[proc][region.0]
+    /// Cells per process in every column (`nregions + 1`).
+    pub fn width(&self) -> usize {
+        self.width
     }
 
-    pub fn sample_mut(&mut self, proc: usize, region: RegionId) -> &mut RegionSample {
-        &mut self.samples[proc][region.0]
+    /// The column of one raw metric. Panics for derived metrics, which
+    /// have no storage of their own.
+    pub fn column(&self, m: Metric) -> &MetricColumn {
+        let idx = m
+            .raw_index()
+            .unwrap_or_else(|| panic!("{} is derived; it has no column", m.name()));
+        &self.cols[idx]
+    }
+
+    /// All raw-metric columns in `RAW_METRICS` order.
+    pub fn columns(&self) -> &[MetricColumn] {
+        &self.cols
+    }
+
+    /// Assemble the row-of-structs view of one cell. Cheap (11 indexed
+    /// loads) but not free: column-scanning consumers should read
+    /// `column(..)` directly.
+    pub fn sample(&self, proc: usize, region: RegionId) -> RegionSample {
+        let mut s = RegionSample::default();
+        for (i, col) in self.cols.iter().enumerate() {
+            s.set_raw(i, col.get(proc, region.0) as f64);
+        }
+        s
+    }
+
+    /// Mutable view of one cell: a write-back guard that behaves like
+    /// `&mut RegionSample` and stores the (possibly updated) fields
+    /// back into the columns when dropped.
+    pub fn sample_mut(&mut self, proc: usize, region: RegionId) -> SampleMut<'_> {
+        let sample = self.sample(proc, region);
+        SampleMut {
+            proc,
+            region: region.0,
+            sample,
+            trace: self,
+        }
+    }
+
+    /// Overwrite one cell from a row-of-structs sample.
+    pub fn set_sample(&mut self, proc: usize, region: RegionId, s: &RegionSample) {
+        for (i, col) in self.cols.iter_mut().enumerate() {
+            col.set(proc, region.0, s.raw(i) as f32);
+        }
+    }
+
+    /// Read one raw cell by column index (`RAW_METRICS` order) — the
+    /// codec fast path.
+    pub fn raw(&self, proc: usize, region: RegionId, field: usize) -> f32 {
+        self.cols[field].get(proc, region.0)
+    }
+
+    /// Write one raw cell by column index (`RAW_METRICS` order).
+    pub fn set_raw(&mut self, proc: usize, region: RegionId, field: usize, v: f64) {
+        self.cols[field].set(proc, region.0, v as f32);
     }
 
     /// Wall-clock time of the whole program in process `p` (WPWT).
     pub fn program_wall(&self, proc: usize) -> f64 {
-        self.samples[proc][0].wall
+        self.cols[0].get(proc, 0) as f64
     }
 
     /// The program's wall time = max over processes (they end together
@@ -81,21 +203,37 @@ impl Trace {
     pub fn region_mean(&self, region: RegionId, f: impl Fn(&RegionSample) -> f64) -> f64 {
         let n = self.nprocs().max(1);
         (0..self.nprocs())
-            .map(|p| f(self.sample(p, region)))
+            .map(|p| f(&self.sample(p, region)))
             .sum::<f64>()
             / n as f64
     }
 
-    /// Structural sanity: every process has a full sample row and the
+    /// Structural sanity: every column spans every process and the
     /// tree validates.
     pub fn validate(&self) -> Result<(), String> {
         self.tree.validate()?;
         let width = self.tree.len() + 1;
-        for (p, row) in self.samples.iter().enumerate() {
-            if row.len() != width {
+        if self.width != width {
+            return Err(format!(
+                "trace width {} disagrees with tree ({} regions)",
+                self.width,
+                self.tree.len()
+            ));
+        }
+        if self.cols.len() != RAW_METRICS.len() {
+            return Err(format!(
+                "trace has {} metric columns, expected {}",
+                self.cols.len(),
+                RAW_METRICS.len()
+            ));
+        }
+        for col in &self.cols {
+            if col.data.len() != self.nprocs * width {
                 return Err(format!(
-                    "process {p} has {} samples, expected {width}",
-                    row.len()
+                    "column {} has {} cells, expected {}",
+                    col.metric().name(),
+                    col.data.len(),
+                    self.nprocs * width
                 ));
             }
         }
@@ -105,6 +243,38 @@ impl Trace {
             }
         }
         Ok(())
+    }
+}
+
+/// Write-back guard returned by [`Trace::sample_mut`]. Derefs to a
+/// [`RegionSample`] copy of the cell; on drop the fields are stored
+/// back into the metric columns (always, even if only read — the
+/// write is idempotent).
+pub struct SampleMut<'t> {
+    trace: &'t mut Trace,
+    proc: usize,
+    region: usize,
+    sample: RegionSample,
+}
+
+impl Deref for SampleMut<'_> {
+    type Target = RegionSample;
+
+    fn deref(&self) -> &RegionSample {
+        &self.sample
+    }
+}
+
+impl DerefMut for SampleMut<'_> {
+    fn deref_mut(&mut self) -> &mut RegionSample {
+        &mut self.sample
+    }
+}
+
+impl Drop for SampleMut<'_> {
+    fn drop(&mut self) {
+        let (proc, region, sample) = (self.proc, self.region, self.sample);
+        self.trace.set_sample(proc, RegionId(region), &sample);
     }
 }
 
@@ -133,6 +303,7 @@ mod tests {
         let t = tiny_trace();
         assert_eq!(t.nprocs(), 2);
         assert_eq!(t.nregions(), 3);
+        assert_eq!(t.width(), 4);
         assert!(t.validate().is_ok());
     }
 
@@ -147,6 +318,55 @@ mod tests {
     fn region_mean_averages_processes() {
         let t = tiny_trace();
         assert!((t.region_mean(RegionId(1), |s| s.wall) - 60.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn columns_are_process_major() {
+        let t = tiny_trace();
+        let wall = t.column(Metric::WallClock);
+        assert_eq!(wall.width(), 4);
+        assert_eq!(wall.data().len(), 8);
+        assert_eq!(wall.proc_row(0), &[100.0, 60.0, 40.0, 30.0]);
+        assert_eq!(wall.proc_row(1), &[100.0, 61.0, 40.0, 30.0]);
+        assert_eq!(wall.get(1, 1), 61.0);
+        // Untouched metrics stay zero-filled.
+        assert!(t.column(Metric::DiskBytes).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "derived")]
+    fn derived_metrics_have_no_column() {
+        tiny_trace().column(Metric::Crnm);
+    }
+
+    #[test]
+    fn sample_round_trips_through_columns() {
+        let mut t = tiny_trace();
+        {
+            let mut s = t.sample_mut(1, RegionId(2));
+            s.cpu = 7.5;
+            s.disk_bytes = 1e9;
+        }
+        let s = t.sample(1, RegionId(2));
+        assert_eq!(s.wall, 40.0);
+        assert_eq!(s.cpu, 7.5);
+        assert_eq!(s.disk_bytes, 1e9);
+        assert_eq!(t.raw(1, RegionId(2), 10), 1e9);
+    }
+
+    #[test]
+    fn set_sample_and_set_raw_agree() {
+        let mut t = tiny_trace();
+        let s = RegionSample {
+            instructions: 123.0,
+            ..RegionSample::default()
+        };
+        t.set_sample(0, RegionId(3), &s);
+        assert_eq!(t.sample(0, RegionId(3)).instructions, 123.0);
+        t.set_raw(0, RegionId(3), 3, 456.0);
+        assert_eq!(t.sample(0, RegionId(3)).instructions, 456.0);
+        // set_sample overwrote the wall written by tiny_trace.
+        assert_eq!(t.sample(0, RegionId(3)).wall, 0.0);
     }
 
     #[test]

@@ -215,7 +215,7 @@ pub fn from_xml(text: &str) -> Result<Trace> {
                 if p >= trace.nprocs() || r > trace.nregions() {
                     bail!("sample ({p},{r}) out of range");
                 }
-                *trace.sample_mut(p, RegionId(r)) = RegionSample {
+                let s = RegionSample {
                     wall: t.f64("wall")?,
                     cpu: t.f64("cpu")?,
                     cycles: t.f64("cycles")?,
@@ -228,6 +228,7 @@ pub fn from_xml(text: &str) -> Result<Trace> {
                     mpi_bytes: t.f64("mpi_bytes")?,
                     disk_bytes: t.f64("disk_bytes")?,
                 };
+                trace.set_sample(p, RegionId(r), &s);
             }
             _ => {}
         }
@@ -249,7 +250,7 @@ mod tests {
         t.set_meta("note", "a<b & c>d");
         for p in 0..2 {
             for r in 0..=2 {
-                let s = t.sample_mut(p, RegionId(r));
+                let mut s = t.sample_mut(p, RegionId(r));
                 s.wall = 1.5 * (p + r + 1) as f64;
                 s.cpu = s.wall - 0.25;
                 s.instructions = 123456.0;

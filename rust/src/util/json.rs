@@ -77,10 +77,15 @@ impl Json {
     /// Parse a JSON document. Trailing whitespace allowed; trailing
     /// garbage is an error.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser {
-            bytes: text.as_bytes(),
-            pos: 0,
-        };
+        Json::parse_bytes(text.as_bytes())
+    }
+
+    /// Parse a JSON document from raw bytes — the byte-oriented entry
+    /// point for callers that read files without a UTF-8 check first.
+    /// Malformed or truncated multi-byte sequences surface as a
+    /// [`JsonError`], never a panic.
+    pub fn parse_bytes(bytes: &[u8]) -> Result<Json, JsonError> {
+        let mut p = Parser { bytes, pos: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -420,7 +425,11 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // The scanned range is ASCII by construction, but with the raw
+        // `parse_bytes` entry point a malformed document must become a
+        // parse error here, never a panic.
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid UTF-8 in number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -487,6 +496,26 @@ mod tests {
         assert!(Json::parse("42 43").is_err());
         assert!(Json::parse("\"\\u12\"").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    /// Satellite regression: raw-byte documents whose multi-byte UTF-8
+    /// sequences are cut off (or plain invalid) must come back as
+    /// parse errors from `parse_bytes`, never panics.
+    #[test]
+    fn truncated_utf8_is_an_error_not_a_panic() {
+        // String whose 3-byte character loses its continuation bytes.
+        assert!(Json::parse_bytes(b"\"\xE4\xB8").is_err());
+        // Continuation byte appearing as a lead byte inside a string.
+        assert!(Json::parse_bytes(b"\"\x85abc\"").is_err());
+        // 4-byte lead at end of input.
+        assert!(Json::parse_bytes(b"[\"\xF0\x9F\"]").is_err());
+        // Invalid bytes outside any string are not a JSON value.
+        assert!(Json::parse_bytes(b"\xFF\xFE").is_err());
+        // Valid multi-byte content still parses through the raw entry.
+        assert_eq!(
+            Json::parse_bytes("\"中\"".as_bytes()).unwrap(),
+            Json::Str("中".to_string())
+        );
     }
 
     #[test]

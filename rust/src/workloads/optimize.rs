@@ -93,7 +93,7 @@ mod tests {
     #[test]
     fn dissimilarity_fix_balances_st() {
         let fixed = st_fix_dissimilarity(&StParams::default());
-        let trace = simulate(&st_coarse(&fixed), 2011);
+        let trace = std::sync::Arc::new(simulate(&st_coarse(&fixed), 2011));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         assert!(
             !report.dissimilarity.exists(),
@@ -105,7 +105,7 @@ mod tests {
     #[test]
     fn disparity_fix_clears_region_8_but_not_11() {
         let fixed = st_fix_disparity(&StParams::default());
-        let trace = simulate(&st_coarse(&fixed), 2011);
+        let trace = std::sync::Arc::new(simulate(&st_coarse(&fixed), 2011));
         let report = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         // Paper: region 8 stops being a disparity bottleneck; region 11
         // remains one (CRNM 0.41 -> 0.26) but its root cause becomes

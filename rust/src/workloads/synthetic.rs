@@ -131,7 +131,7 @@ mod tests {
     #[test]
     fn clean_app_has_no_bottlenecks() {
         let w = synthetic(4, 8, &[], 7);
-        let t = simulate(&w, 7);
+        let t = std::sync::Arc::new(simulate(&w, 7));
         let r = analyze(&t, &NativeBackend, &AnalysisConfig::default()).unwrap();
         assert!(!r.dissimilarity.exists(), "{:?}", r.dissimilarity.clustering);
     }
@@ -139,7 +139,7 @@ mod tests {
     #[test]
     fn imbalance_is_located() {
         let w = synthetic(4, 8, &[(5, Inject::Imbalance)], 9);
-        let t = simulate(&w, 9);
+        let t = std::sync::Arc::new(simulate(&w, 9));
         let r = analyze(&t, &NativeBackend, &AnalysisConfig::default()).unwrap();
         assert!(r.dissimilarity.exists());
         assert!(
@@ -162,7 +162,7 @@ mod tests {
             },
             |&(inj, nregions, region, seed)| {
                 let w = synthetic(4, nregions, &[(region, inj)], seed);
-                let t = simulate(&w, seed);
+                let t = std::sync::Arc::new(simulate(&w, seed));
                 let r = analyze(&t, &NativeBackend, &AnalysisConfig::default())
                     .map_err(|e| e.to_string())?;
                 match inj {

@@ -7,6 +7,8 @@
 //! the artifact directory is missing so `cargo test` stays green on a
 //! fresh checkout.
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::{ClusterBackend, NativeBackend, PjrtBackend};
 use autoanalyzer::simulator::engine::simulate;
@@ -93,14 +95,14 @@ fn paper_workloads_same_conclusions() {
     let native = NativeBackend;
     let config = AnalysisConfig::default();
     let traces = vec![
-        simulate(&st_coarse(&StParams::default()), 2011),
-        simulate(&st_fine(&StParams::default()), 2011),
-        simulate(&npar1way(&NparParams::default()), 2011),
-        simulate(&mpibzip2::mpibzip2(), 2011),
-        simulate(
+        Arc::new(simulate(&st_coarse(&StParams::default()), 2011)),
+        Arc::new(simulate(&st_fine(&StParams::default()), 2011)),
+        Arc::new(simulate(&npar1way(&NparParams::default()), 2011)),
+        Arc::new(simulate(&mpibzip2::mpibzip2(), 2011)),
+        Arc::new(simulate(
             &synthetic::synthetic(8, 12, &[(3, synthetic::Inject::Imbalance)], 5),
             5,
-        ),
+        )),
     ];
     for trace in traces {
         let a = analyze(&trace, &native, &config).unwrap();

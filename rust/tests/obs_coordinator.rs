@@ -5,7 +5,7 @@
 //! their own test binary — the registry is per-process — and serialize
 //! on one mutex because the test harness runs #[test] fns in parallel.
 
-use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
 use autoanalyzer::analysis::pipeline::AnalysisConfig;
 use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
@@ -37,7 +37,7 @@ fn run_jobs(n: u64, workers: usize) {
         let spec = synthetic(4, 6, &inj, i);
         coord.submit(AnalysisJob {
             id: i,
-            trace: simulate(&spec, i),
+            trace: Arc::new(simulate(&spec, i)),
             config: AnalysisConfig::default(),
         });
     }

@@ -2,6 +2,8 @@
 //! codec round trips feeding the analysis, golden outcomes per paper
 //! workload, determinism, and failure injection (malformed traces).
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::NativeBackend;
 use autoanalyzer::regions::RegionId;
@@ -18,7 +20,7 @@ fn ids(v: &[RegionId]) -> Vec<usize> {
 
 #[test]
 fn st_golden_outcomes() {
-    let trace = simulate(&st_coarse(&StParams::default()), 2011);
+    let trace = Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
     let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
     assert_eq!(r.dissimilarity.clustering.num_clusters(), 5);
     assert_eq!(ids(&r.dissimilarity.cccrs), vec![11]);
@@ -36,9 +38,9 @@ fn st_golden_outcomes() {
 
 #[test]
 fn analysis_survives_json_round_trip() {
-    let trace = simulate(&st_coarse(&StParams::default()), 2011);
+    let trace = Arc::new(simulate(&st_coarse(&StParams::default()), 2011));
     let text = json_codec::to_json(&trace).pretty();
-    let reloaded = json_codec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let reloaded = Arc::new(json_codec::from_json(&Json::parse(&text).unwrap()).unwrap());
     let a = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
     let b = analyze(&reloaded, &NativeBackend, &AnalysisConfig::default()).unwrap();
     assert_eq!(a.dissimilarity.cccrs, b.dissimilarity.cccrs);
@@ -51,9 +53,9 @@ fn analysis_survives_json_round_trip() {
 
 #[test]
 fn analysis_survives_xml_round_trip() {
-    let trace = simulate(&npar1way(&NparParams::default()), 2011);
+    let trace = Arc::new(simulate(&npar1way(&NparParams::default()), 2011));
     let xml = xml_codec::to_xml(&trace);
-    let reloaded = xml_codec::from_xml(&xml).unwrap();
+    let reloaded = Arc::new(xml_codec::from_xml(&xml).unwrap());
     let a = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
     let b = analyze(&reloaded, &NativeBackend, &AnalysisConfig::default()).unwrap();
     assert_eq!(a.disparity.cccrs, b.disparity.cccrs);
@@ -67,13 +69,13 @@ fn analysis_survives_xml_round_trip() {
 fn determinism_across_runs() {
     for seed in [1u64, 42, 2011] {
         let a = analyze(
-            &simulate(&mpibzip2::mpibzip2(), seed),
+            &Arc::new(simulate(&mpibzip2::mpibzip2(), seed)),
             &NativeBackend,
             &AnalysisConfig::default(),
         )
         .unwrap();
         let b = analyze(
-            &simulate(&mpibzip2::mpibzip2(), seed),
+            &Arc::new(simulate(&mpibzip2::mpibzip2(), seed)),
             &NativeBackend,
             &AnalysisConfig::default(),
         )
@@ -92,7 +94,7 @@ fn seed_changes_noise_not_conclusions() {
     // workloads (the paper ran real apps repeatedly with the same
     // conclusions).
     for seed in [7u64, 77, 777, 7777] {
-        let trace = simulate(&st_coarse(&StParams::default()), seed);
+        let trace = Arc::new(simulate(&st_coarse(&StParams::default()), seed));
         let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default()).unwrap();
         assert_eq!(ids(&r.dissimilarity.cccrs), vec![11], "seed {seed}");
         assert_eq!(ids(&r.disparity.ccrs), vec![8, 11, 14], "seed {seed}");

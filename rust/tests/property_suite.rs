@@ -2,7 +2,10 @@
 //! algorithms must satisfy on arbitrary inputs, via the in-tree
 //! property harness (`PROP_SEED`/`PROP_CASE` reproduce failures).
 
+use std::sync::Arc;
+
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::analysis::session::AnalysisSession;
 use autoanalyzer::cluster::optics::simplified_optics;
 use autoanalyzer::cluster::NativeBackend;
 use autoanalyzer::metrics::{perf_matrix, Metric, MetricView};
@@ -35,7 +38,7 @@ fn pipeline_total_on_random_workloads() {
         },
         |(nprocs, nregions, injections, seed)| {
             let spec = synthetic(*nprocs, *nregions, injections, *seed);
-            let trace = simulate(&spec, *seed);
+            let trace = Arc::new(simulate(&spec, *seed));
             let r = analyze(&trace, &NativeBackend, &AnalysisConfig::default())
                 .map_err(|e| e.to_string())?;
             // CCCRs ⊆ CCRs (dissimilarity).
@@ -93,16 +96,18 @@ fn algorithm2_restores_data_and_is_idempotent() {
         },
         |&(nregions, region, seed)| {
             let spec = synthetic(6, nregions, &[(region, Inject::Imbalance)], seed);
-            let trace = simulate(&spec, seed);
+            let trace = Arc::new(simulate(&spec, seed));
             let view = MetricView::Plain(Metric::CpuClock);
             let before = perf_matrix(&trace, view);
-            let a = dissimilarity_search(&trace, &NativeBackend, view)
+            // Fresh session per search, so each call recomputes from the
+            // shared trace (the idempotency claim stays non-trivial).
+            let a = dissimilarity_search(&AnalysisSession::new(trace.clone()), &NativeBackend, view)
                 .map_err(|e| e.to_string())?;
             let after = perf_matrix(&trace, view);
             if before.max_abs_diff(&after) != 0.0 {
                 return Err("trace mutated by the search".into());
             }
-            let b = dissimilarity_search(&trace, &NativeBackend, view)
+            let b = dissimilarity_search(&AnalysisSession::new(trace.clone()), &NativeBackend, view)
                 .map_err(|e| e.to_string())?;
             if a.ccrs != b.ccrs || a.cccrs != b.cccrs {
                 return Err("search not idempotent".into());
@@ -207,6 +212,65 @@ fn codecs_round_trip_random_traces() {
                     }
                     if a != t3.sample(p, RegionId(r)) {
                         return Err(format!("xml mismatch at ({p},{r})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Columnar satellite: both codecs must preserve every metric column
+/// bit-exactly through their *text* form. The writers print f64
+/// shortest-round-trip decimals, and the columns store f32, so
+/// f32 → f64 → text → f64 → f32 is the identity on every cell.
+#[test]
+fn codec_round_trips_preserve_columns_bit_exactly() {
+    forall(
+        "codec columns bit-exact",
+        |rng: &mut Rng| {
+            let nprocs = rng.range(2, 8);
+            let nregions = rng.range(2, 10);
+            let mut injections = Vec::new();
+            for _ in 0..rng.below(3) {
+                injections.push((rng.range(1, nregions), *rng.choose(&Inject::all())));
+            }
+            let seed = rng.next_u64() & 0xFFFF;
+            (nprocs, nregions, injections, seed)
+        },
+        |(nprocs, nregions, injections, seed)| {
+            let trace = simulate(&synthetic(*nprocs, *nregions, injections, *seed), *seed);
+            let text = autoanalyzer::trace::json_codec::to_json(&trace).pretty();
+            let t2 = autoanalyzer::trace::json_codec::from_json(
+                &autoanalyzer::util::json::Json::parse(&text).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            let xml = autoanalyzer::trace::xml_codec::to_xml(&trace);
+            let t3 = autoanalyzer::trace::xml_codec::from_xml(&xml)
+                .map_err(|e| e.to_string())?;
+            for ((orig, a), b) in trace
+                .columns()
+                .iter()
+                .zip(t2.columns())
+                .zip(t3.columns())
+            {
+                if a.metric() != orig.metric() || b.metric() != orig.metric() {
+                    return Err("column order changed across a round trip".into());
+                }
+                for (i, ((&v, &x), &y)) in
+                    orig.data().iter().zip(a.data()).zip(b.data()).enumerate()
+                {
+                    if v.to_bits() != x.to_bits() {
+                        return Err(format!(
+                            "json: {:?} cell {i}: {v} became {x}",
+                            orig.metric()
+                        ));
+                    }
+                    if v.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "xml: {:?} cell {i}: {v} became {y}",
+                            orig.metric()
+                        ));
                     }
                 }
             }
