@@ -1,5 +1,8 @@
 //! `cargo bench --bench perf_coordinator` — analysis-service throughput
-//! scaling across worker counts (the L3 perf deliverable).
+//! scaling across worker counts (the L3 perf deliverable), for both the
+//! per-job `submit` front door and the fleet `submit_batch` path over
+//! the sharded queue. Case numbers also land in the `BENCH_JSON_OUT`
+//! summary (see `eval::bench`) so CI tracks the trajectory.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -7,6 +10,7 @@ use std::time::Instant;
 use autoanalyzer::analysis::pipeline::AnalysisConfig;
 use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
 use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::eval::bench::Bench;
 use autoanalyzer::simulator::engine::simulate;
 use autoanalyzer::trace::Trace;
 use autoanalyzer::util::stats::percentile;
@@ -27,18 +31,32 @@ fn make_traces(n: u64) -> Vec<Arc<Trace>> {
         .collect()
 }
 
-fn run(workers: usize, traces: &[Arc<Trace>]) -> (f64, f64, f64) {
+fn make_jobs(traces: &[Arc<Trace>]) -> Vec<AnalysisJob> {
+    traces
+        .iter()
+        .enumerate()
+        .map(|(i, t)| AnalysisJob {
+            id: i as u64,
+            // Arc bump, not a sample copy — submit is O(1) in trace size.
+            trace: t.clone(),
+            config: AnalysisConfig::default(),
+        })
+        .collect()
+}
+
+/// One full service lifecycle; returns (jobs/s, p50 ms, p99 ms).
+fn run(workers: usize, traces: &[Arc<Trace>], batch: bool) -> (f64, f64, f64) {
     let (coord, rx) = Coordinator::start(workers, 32, || {
         Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
     });
     let start = Instant::now();
-    for (i, t) in traces.iter().enumerate() {
-        // Arc bump, not a sample copy — submit is O(1) in trace size.
-        coord.submit(AnalysisJob {
-            id: i as u64,
-            trace: t.clone(),
-            config: AnalysisConfig::default(),
-        });
+    let jobs = make_jobs(traces);
+    if batch {
+        coord.submit_batch(jobs);
+    } else {
+        for job in jobs {
+            coord.submit(job);
+        }
     }
     let mut lat = Vec::new();
     for _ in 0..traces.len() {
@@ -63,22 +81,36 @@ fn main() {
     };
     let traces = make_traces(n);
     let mut t = Table::new(
-        &format!("perf_coordinator — {n} jobs (8p x 12r synthetic)"),
-        &["workers", "jobs/s", "p50 (ms)", "p99 (ms)", "scaling"],
+        &format!("perf_coordinator — {n} jobs (8p x 12r synthetic), sharded queue"),
+        &["workers", "front door", "jobs/s", "p50 (ms)", "p99 (ms)", "scaling"],
     );
+    let mut bench = Bench::new("perf_coordinator");
     let mut base = 0.0;
     for workers in [1usize, 2, 4, 8] {
-        let (thr, p50, p99) = run(workers, &traces);
-        if workers == 1 {
-            base = thr;
+        for (front, batch) in [("submit", false), ("submit_batch", true)] {
+            let (thr, p50, p99) = run(workers, &traces, batch);
+            if workers == 1 && !batch {
+                base = thr;
+            }
+            t.row(&[
+                workers.to_string(),
+                front.to_string(),
+                format!("{thr:.1}"),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                format!("{:.2}x", thr / base),
+            ]);
+            // mean_s is the service-side cost per job (wall / jobs), so
+            // trajectory deltas compare like-for-like with other cases.
+            bench.push_case(
+                &format!("serve {workers}w {front}"),
+                n,
+                1.0 / thr,
+                p50 * 1e-3,
+                p99 * 1e-3,
+            );
         }
-        t.row(&[
-            workers.to_string(),
-            format!("{thr:.1}"),
-            format!("{p50:.2}"),
-            format!("{p99:.2}"),
-            format!("{:.2}x", thr / base),
-        ]);
     }
     println!("{}", t.render());
+    println!("{}", bench.report_with_metrics());
 }

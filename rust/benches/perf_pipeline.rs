@@ -13,6 +13,7 @@ use autoanalyzer::analysis::rootcause::{disparity_root_cause, dissimilarity_root
 use autoanalyzer::analysis::session::AnalysisSession;
 use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
 use autoanalyzer::eval::bench::Bench;
+use autoanalyzer::fleet::analyze_batch;
 use autoanalyzer::metrics::{Metric, MetricView};
 use autoanalyzer::search::{disparity_search, dissimilarity_search};
 use autoanalyzer::simulator::engine::simulate;
@@ -96,6 +97,27 @@ fn main() {
     });
     bench.run("analyze 32p x 48r full (cold)", || {
         analyze(&big, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    // Fleet path: a batch of 8 mixed synthetic runs, analyzed through
+    // `analyze_batch` vs the sequential per-trace loop it must match.
+    let fleet: Vec<Arc<autoanalyzer::trace::Trace>> = (0..8u64)
+        .map(|i| {
+            let inj = if i % 2 == 0 {
+                vec![(2usize, synthetic::Inject::Imbalance)]
+            } else {
+                vec![]
+            };
+            Arc::new(simulate(&synthetic::synthetic(8, 12, &inj, i), i))
+        })
+        .collect();
+    bench.run("fleet analyze_batch 8 traces", || {
+        analyze_batch(&fleet, &backend, &AnalysisConfig::default()).unwrap()
+    });
+    bench.run("fleet sequential 8 traces", || {
+        fleet
+            .iter()
+            .map(|t| analyze(t, &backend, &AnalysisConfig::default()).unwrap())
+            .collect::<Vec<_>>()
     });
     bench.run("trace json encode st", || json_codec::to_json(&st).pretty());
     let encoded = json_codec::to_json(&st).pretty();

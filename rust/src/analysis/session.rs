@@ -149,6 +149,30 @@ impl AnalysisSession {
         Ok(caches.dists.entry(key).or_insert(built).clone())
     }
 
+    /// Install an externally computed distance matrix for
+    /// `(backend, view)`. The fleet batch path computes many traces'
+    /// distances in one packed dispatch and seeds each session here so
+    /// the per-trace pipeline never re-dispatches. First value wins:
+    /// seeding an already-cached key is a no-op, and callers must only
+    /// seed what the backend itself would have produced.
+    pub fn seed_distances(
+        &self,
+        backend: &dyn ClusterBackend,
+        view: MetricView,
+        dists: Arc<Matrix>,
+    ) {
+        let key = (backend.name(), view);
+        let mut caches = self.caches.lock().unwrap();
+        if caches.dists.contains_key(&key) {
+            return;
+        }
+        // Counts as this session's (one) build of the key — the build
+        // simply happened inside a fused dispatch.
+        self.dist_builds.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("session_dists_seed_total").inc();
+        caches.dists.insert(key, dists);
+    }
+
     /// Algorithm 1 clustering of the `view` matrix (the backend
     /// supplies the distance matrix; both are memoized).
     pub fn clustering(
@@ -277,6 +301,23 @@ mod tests {
         let k2 = s.severity_kmeans(&NativeBackend, view).unwrap();
         assert!(Arc::ptr_eq(&k1, &k2));
         assert_eq!(s.stats().means_builds, 1);
+    }
+
+    #[test]
+    fn seeded_distances_are_served_from_cache() {
+        let s = session();
+        let view = MetricView::Plain(Metric::CpuClock);
+        let d = Arc::new(NativeBackend.pairwise_dists(&s.matrix(view)).unwrap());
+        s.seed_distances(&NativeBackend, view, d.clone());
+        let got = s.distances(&NativeBackend, view).unwrap();
+        assert!(Arc::ptr_eq(&d, &got), "seed must satisfy the lookup");
+        let stats = s.stats();
+        assert_eq!(stats.dist_builds, 1);
+        assert_eq!(stats.dist_hits, 1);
+        // Re-seeding an occupied key is a no-op.
+        s.seed_distances(&NativeBackend, view, Arc::new(Matrix::zeros(1, 1)));
+        assert!(Arc::ptr_eq(&d, &s.distances(&NativeBackend, view).unwrap()));
+        assert_eq!(s.stats().dist_builds, 1);
     }
 
     #[test]

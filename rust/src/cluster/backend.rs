@@ -17,6 +17,22 @@ pub trait ClusterBackend {
     /// Euclidean distance matrix over the rows of `x`.
     fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix>;
 
+    /// Distance matrices for several inputs at once. The default is
+    /// one dispatch per input; backends whose dispatches are
+    /// bucket-padded anyway (PJRT) override this to pack several
+    /// inputs into shared dispatches. Results are positionally
+    /// identical to calling `pairwise_dists` on each input.
+    fn pairwise_dists_batch(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        xs.iter().map(|x| self.pairwise_dists(x)).collect()
+    }
+
+    /// Whether `pairwise_dists_batch` actually fuses dispatches. The
+    /// fleet layer skips the batch pre-pass when this is false (the
+    /// per-trace fallback would issue the same dispatches anyway).
+    fn supports_batched_dispatch(&self) -> bool {
+        false
+    }
+
     /// Five-band severity clustering of 1-D points.
     fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult>;
 
@@ -86,6 +102,15 @@ impl ClusterBackend for PjrtBackend {
         self.runtime.pairwise_dists(x)
     }
 
+    fn pairwise_dists_batch(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        crate::obs_counter!("backend_pjrt_dispatch_total").inc();
+        self.runtime.pairwise_dists_packed(xs)
+    }
+
+    fn supports_batched_dispatch(&self) -> bool {
+        true
+    }
+
     fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
         crate::obs_counter!("backend_pjrt_dispatch_total").inc();
         let init = kmeans::farthest_point_init(points);
@@ -141,5 +166,18 @@ mod tests {
     #[test]
     fn unknown_backend_rejected() {
         assert!(select_backend("gpu", "artifacts").is_err());
+    }
+
+    #[test]
+    fn default_batch_dispatch_matches_sequential() {
+        let a = Matrix::from_rows(&[vec![0.0, 0.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![1.0, 0.0], vec![1.0, 2.0], vec![5.0, 2.0]]);
+        assert!(!NativeBackend.supports_batched_dispatch());
+        let batch = NativeBackend.pairwise_dists_batch(&[&a, &b]).unwrap();
+        assert_eq!(batch.len(), 2);
+        let da = NativeBackend.pairwise_dists(&a).unwrap();
+        let db = NativeBackend.pairwise_dists(&b).unwrap();
+        assert_eq!(batch[0].max_abs_diff(&da), 0.0);
+        assert_eq!(batch[1].max_abs_diff(&db), 0.0);
     }
 }

@@ -7,7 +7,11 @@
 //! (trace, config) pair and the hot cost is the clustering work that
 //! Algorithm 2 re-issues per code region. The coordinator owns:
 //!
-//! - a bounded job queue with backpressure (`submit` blocks when full);
+//! - a bounded job queue, sharded per worker and hashed by job id,
+//!   with backpressure (`submit` blocks on a full shard, `try_submit`
+//!   returns a typed `QueueFull`, `submit_batch` takes each shard lock
+//!   once per chunk) and work-stealing pops so a hot shard never
+//!   strands idle workers;
 //! - a worker pool, each worker constructing its *own* backend (the
 //!   PJRT client wraps raw C handles, so backends are created on the
 //!   worker thread rather than shared);
@@ -15,4 +19,4 @@
 
 pub mod service;
 
-pub use service::{AnalysisJob, Coordinator, CoordinatorStats, JobOutcome};
+pub use service::{AnalysisJob, Coordinator, CoordinatorStats, JobOutcome, QueueFull};

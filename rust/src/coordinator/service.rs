@@ -1,6 +1,21 @@
-//! Worker-pool job service.
+//! Worker-pool job service over a sharded queue.
+//!
+//! The queue is split into one shard per worker; `submit` hashes the
+//! job id to a shard (Fibonacci hashing, so dense id ranges spread
+//! evenly) and only contends on that shard's lock. Workers pop from
+//! their own shard first and *steal* from sibling shards when theirs is
+//! empty, so a hot shard never strands idle workers. `submit_batch`
+//! amortizes the fleet path further: it groups a whole batch by shard
+//! and takes each shard lock once per chunk instead of once per job.
+//!
+//! Backpressure is per shard: each shard holds at most
+//! `ceil(queue_cap / shards)` jobs. `submit` blocks on a full shard
+//! (classic bounded-queue behavior); `try_submit` instead returns the
+//! typed [`QueueFull`] error carrying the rejected job back to the
+//! caller, for callers that must never park.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -9,6 +24,7 @@ use anyhow::Result;
 
 use crate::analysis::pipeline::{analyze, AnalysisConfig};
 use crate::cluster::ClusterBackend;
+use crate::obs::Gauge;
 use crate::trace::Trace;
 
 /// One unit of work: analyze a trace. Jobs share the trace by
@@ -32,6 +48,40 @@ pub struct JobOutcome {
     pub error: Option<String>,
 }
 
+/// Typed rejection from [`Coordinator::try_submit`]: the target shard
+/// was at capacity. Carries the job back so the caller can retry,
+/// reroute, or drop it deliberately.
+pub struct QueueFull {
+    /// Shard index the job hashed to.
+    pub shard: usize,
+    /// Per-shard capacity that was hit.
+    pub cap: usize,
+    /// The rejected job, returned unconsumed.
+    pub job: AnalysisJob,
+}
+
+impl fmt::Debug for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("QueueFull")
+            .field("shard", &self.shard)
+            .field("cap", &self.cap)
+            .field("job_id", &self.job.id)
+            .finish()
+    }
+}
+
+impl fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "queue shard {} full (cap {}), job {} rejected",
+            self.shard, self.cap, self.job.id
+        )
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
 /// Aggregate service counters.
 #[derive(Debug, Default)]
 pub struct CoordinatorStats {
@@ -42,17 +92,105 @@ pub struct CoordinatorStats {
 }
 
 impl CoordinatorStats {
+    /// Completed jobs per second of `wall`. A zero or otherwise
+    /// degenerate wall (paused clocks, sub-nanosecond windows) yields
+    /// 0.0, never inf/NaN.
     pub fn throughput(&self, wall: Duration) -> f64 {
-        self.completed.load(Ordering::Relaxed) as f64 / wall.as_secs_f64().max(1e-9)
+        let secs = wall.as_secs_f64();
+        if secs <= 0.0 || !secs.is_finite() {
+            return 0.0;
+        }
+        let t = self.completed.load(Ordering::Relaxed) as f64 / secs;
+        if t.is_finite() {
+            t
+        } else {
+            0.0
+        }
     }
 }
 
-struct Queue {
+struct Shard {
     jobs: Mutex<VecDeque<AnalysisJob>>,
-    cap: usize,
     not_full: Condvar,
-    not_empty: Condvar,
+    /// `coordinator_shard_{i}_depth` — per-shard level, alongside the
+    /// aggregate `coordinator_queue_depth`.
+    depth: Arc<Gauge>,
+}
+
+struct Queue {
+    shards: Vec<Shard>,
+    /// Per-shard bound: `ceil(queue_cap / shards)`.
+    shard_cap: usize,
+    /// Jobs pushed but not yet popped, across all shards. Workers that
+    /// find every shard empty park on `wake` only after re-checking
+    /// this under the `idle` lock, so a concurrent push is never lost.
+    pending: AtomicU64,
+    idle: Mutex<()>,
+    wake: Condvar,
     closed: AtomicBool,
+}
+
+impl Queue {
+    /// Shard index for a job id. Fibonacci hashing: multiply by
+    /// 2^64 / φ and take the top bits, which spreads both dense and
+    /// strided id sequences evenly across shards.
+    fn shard_of(&self, id: u64) -> usize {
+        let h = (id ^ (id >> 32)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) % self.shards.len()
+    }
+
+    /// Wake parked workers. Notifying under the `idle` lock pairs with
+    /// the pop-side re-check of `pending`, ruling out lost wakeups.
+    fn wake_workers(&self, all: bool) {
+        let _guard = self.idle.lock().unwrap();
+        if all {
+            self.wake.notify_all();
+        } else {
+            self.wake.notify_one();
+        }
+    }
+
+    /// Pop a job for worker `wid`: own shard first (blocking lock),
+    /// then try-lock steals from siblings. Returns `None` only once
+    /// the queue is closed *and* drained.
+    fn pop(&self, wid: usize) -> Option<AnalysisJob> {
+        let n = self.shards.len();
+        loop {
+            for k in 0..n {
+                let sid = (wid + k) % n;
+                let shard = &self.shards[sid];
+                let jobs = if k == 0 {
+                    Some(shard.jobs.lock().unwrap())
+                } else {
+                    // A contended sibling lock means someone is already
+                    // serving that shard; skip rather than queue up.
+                    shard.jobs.try_lock().ok()
+                };
+                let Some(mut jobs) = jobs else { continue };
+                if let Some(job) = jobs.pop_front() {
+                    self.pending.fetch_sub(1, Ordering::AcqRel);
+                    shard.depth.sub(1);
+                    crate::obs_gauge!("coordinator_queue_depth").sub(1);
+                    drop(jobs);
+                    if k > 0 {
+                        crate::obs_counter!("coordinator_steals_total").inc();
+                    }
+                    shard.not_full.notify_one();
+                    return Some(job);
+                }
+            }
+            // Every shard looked empty. Park — but only after ruling
+            // out a racing push under the idle lock.
+            let guard = self.idle.lock().unwrap();
+            if self.pending.load(Ordering::Acquire) > 0 {
+                continue;
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            drop(self.wake.wait(guard).unwrap());
+        }
+    }
 }
 
 /// The coordinator service. Results are delivered through an
@@ -64,10 +202,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start `workers` threads. `backend_factory` runs once per worker,
-    /// on the worker thread (PJRT clients are per-thread; see module
-    /// docs). Queue holds at most `queue_cap` pending jobs — `submit`
-    /// blocks beyond that (backpressure).
+    /// Start `workers` threads over `workers` queue shards.
+    /// `backend_factory` runs once per worker, on the worker thread
+    /// (PJRT clients are per-thread; see module docs). The queue holds
+    /// at most ~`queue_cap` pending jobs, split evenly across shards —
+    /// `submit` blocks on a full shard (backpressure), `try_submit`
+    /// returns [`QueueFull`] instead.
     pub fn start<F>(
         workers: usize,
         queue_cap: usize,
@@ -76,18 +216,29 @@ impl Coordinator {
     where
         F: Fn() -> Result<Box<dyn ClusterBackend>> + Send + Clone + 'static,
     {
+        let nworkers = workers.max(1);
+        let shard_cap = queue_cap.max(1).div_ceil(nworkers);
+        let shards = (0..nworkers)
+            .map(|sid| Shard {
+                jobs: Mutex::new(VecDeque::new()),
+                not_full: Condvar::new(),
+                depth: crate::obs::registry()
+                    .gauge(&format!("coordinator_shard_{sid}_depth")),
+            })
+            .collect();
         let queue = Arc::new(Queue {
-            jobs: Mutex::new(VecDeque::new()),
-            cap: queue_cap.max(1),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
+            shards,
+            shard_cap,
+            pending: AtomicU64::new(0),
+            idle: Mutex::new(()),
+            wake: Condvar::new(),
             closed: AtomicBool::new(false),
         });
         let stats = Arc::new(CoordinatorStats::default());
         let (tx, rx) = std::sync::mpsc::channel::<JobOutcome>();
 
         let mut handles = Vec::new();
-        for wid in 0..workers.max(1) {
+        for wid in 0..nworkers {
             let queue = queue.clone();
             let stats = stats.clone();
             let tx = tx.clone();
@@ -106,25 +257,7 @@ impl Coordinator {
                             }
                         };
                         crate::obs_gauge!("coordinator_workers").add(1);
-                        loop {
-                            let job = {
-                                let mut jobs = queue.jobs.lock().unwrap();
-                                loop {
-                                    if let Some(job) = jobs.pop_front() {
-                                        crate::obs_gauge!("coordinator_queue_depth").sub(1);
-                                        queue.not_full.notify_one();
-                                        break Some(job);
-                                    }
-                                    if queue.closed.load(Ordering::Acquire) {
-                                        break None;
-                                    }
-                                    jobs = queue.not_empty.wait(jobs).unwrap();
-                                }
-                            };
-                            let Some(job) = job else {
-                                crate::obs_gauge!("coordinator_workers").sub(1);
-                                return;
-                            };
+                        while let Some(job) = queue.pop(wid) {
                             let start = Instant::now();
                             crate::obs_gauge!("coordinator_workers_busy").add(1);
                             let span = crate::obs_span!("coordinator_job_seconds");
@@ -163,6 +296,7 @@ impl Coordinator {
                             // Receiver may have been dropped (fire-and-forget callers).
                             let _ = tx.send(outcome);
                         }
+                        crate::obs_gauge!("coordinator_workers").sub(1);
                     })
                     .expect("spawn worker"),
             );
@@ -178,28 +312,119 @@ impl Coordinator {
         )
     }
 
-    /// Enqueue a job; blocks while the queue is full.
+    /// Shard index a job id routes to (exposed for tests and for
+    /// callers that pre-partition their own batches).
+    pub fn shard_of(&self, id: u64) -> usize {
+        self.queue.shard_of(id)
+    }
+
+    /// Number of queue shards (== worker count).
+    pub fn shards(&self) -> usize {
+        self.queue.shards.len()
+    }
+
+    fn record_submitted(&self, n: u64) {
+        self.stats.submitted.fetch_add(n, Ordering::Relaxed);
+        crate::obs_counter!("coordinator_jobs_submitted_total").add(n);
+    }
+
+    /// Enqueue a job; blocks while its shard is full.
     pub fn submit(&self, job: AnalysisJob) {
-        let mut jobs = self.queue.jobs.lock().unwrap();
-        while jobs.len() >= self.queue.cap {
-            jobs = self.queue.not_full.wait(jobs).unwrap();
+        let sid = self.queue.shard_of(job.id);
+        let shard = &self.queue.shards[sid];
+        let mut jobs = shard.jobs.lock().unwrap();
+        while jobs.len() >= self.queue.shard_cap {
+            jobs = shard.not_full.wait(jobs).unwrap();
         }
         jobs.push_back(job);
-        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        crate::obs_counter!("coordinator_jobs_submitted_total").inc();
+        self.queue.pending.fetch_add(1, Ordering::AcqRel);
+        shard.depth.add(1);
         crate::obs_gauge!("coordinator_queue_depth").add(1);
-        self.queue.not_empty.notify_one();
+        drop(jobs);
+        self.record_submitted(1);
+        self.queue.wake_workers(false);
     }
 
-    /// Current queue depth (for backpressure monitoring).
+    /// Enqueue a job without blocking: returns [`QueueFull`] (carrying
+    /// the job back) if its shard is at capacity.
+    pub fn try_submit(&self, job: AnalysisJob) -> std::result::Result<(), QueueFull> {
+        let sid = self.queue.shard_of(job.id);
+        let shard = &self.queue.shards[sid];
+        let mut jobs = shard.jobs.lock().unwrap();
+        if jobs.len() >= self.queue.shard_cap {
+            return Err(QueueFull {
+                shard: sid,
+                cap: self.queue.shard_cap,
+                job,
+            });
+        }
+        jobs.push_back(job);
+        self.queue.pending.fetch_add(1, Ordering::AcqRel);
+        shard.depth.add(1);
+        crate::obs_gauge!("coordinator_queue_depth").add(1);
+        drop(jobs);
+        self.record_submitted(1);
+        self.queue.wake_workers(false);
+        Ok(())
+    }
+
+    /// Enqueue a whole batch, taking each shard lock once per chunk
+    /// instead of once per job. Blocks (per shard, job at a time) only
+    /// when a shard is full; still subject to the same per-shard bound
+    /// as `submit`.
+    pub fn submit_batch(&self, batch: Vec<AnalysisJob>) {
+        crate::obs_histogram!("coordinator_submit_batch_size").observe(batch.len() as f64);
+        let n = self.queue.shards.len();
+        let mut per_shard: Vec<VecDeque<AnalysisJob>> = (0..n).map(|_| VecDeque::new()).collect();
+        for job in batch {
+            let sid = self.queue.shard_of(job.id);
+            per_shard[sid].push_back(job);
+        }
+        for (sid, mut jobs) in per_shard.into_iter().enumerate() {
+            let shard = &self.queue.shards[sid];
+            while !jobs.is_empty() {
+                let mut pushed = 0u64;
+                {
+                    let mut q = shard.jobs.lock().unwrap();
+                    while q.len() < self.queue.shard_cap {
+                        let Some(job) = jobs.pop_front() else { break };
+                        q.push_back(job);
+                        pushed += 1;
+                    }
+                    if pushed > 0 {
+                        self.queue.pending.fetch_add(pushed, Ordering::AcqRel);
+                        shard.depth.add(pushed as i64);
+                        crate::obs_gauge!("coordinator_queue_depth").add(pushed as i64);
+                    }
+                }
+                if pushed > 0 {
+                    self.record_submitted(pushed);
+                    self.queue.wake_workers(true);
+                }
+                // Shard full with jobs left: fall back to the blocking
+                // path for one job, then resume chunking.
+                if let Some(job) = jobs.pop_front() {
+                    self.submit(job);
+                }
+            }
+        }
+    }
+
+    /// Current queue depth across all shards (for backpressure
+    /// monitoring).
     pub fn queued(&self) -> usize {
-        self.queue.jobs.lock().unwrap().len()
+        self.queue
+            .shards
+            .iter()
+            .map(|s| s.jobs.lock().unwrap().len())
+            .sum()
     }
 
-    /// Close the queue and join all workers.
+    /// Close the queue and join all workers (remaining jobs drain
+    /// first).
     pub fn shutdown(self) {
         self.queue.closed.store(true, Ordering::Release);
-        self.queue.not_empty.notify_all();
+        self.queue.wake_workers(true);
         for h in self.workers {
             let _ = h.join();
         }
@@ -215,6 +440,14 @@ mod tests {
 
     fn native_factory() -> Result<Box<dyn ClusterBackend>> {
         Ok(Box::new(NativeBackend))
+    }
+
+    fn job(id: u64, trace: &Arc<Trace>) -> AnalysisJob {
+        AnalysisJob {
+            id,
+            trace: trace.clone(),
+            config: AnalysisConfig::default(),
+        }
     }
 
     #[test]
@@ -294,11 +527,7 @@ mod tests {
         // The worker can't pop anything yet, so exactly `cap` submits
         // go through without blocking.
         for i in 0..cap as u64 {
-            coord.submit(AnalysisJob {
-                id: i,
-                trace: trace.clone(),
-                config: AnalysisConfig::default(),
-            });
+            coord.submit(job(i, &trace));
         }
         assert_eq!(coord.queued(), cap);
 
@@ -311,11 +540,7 @@ mod tests {
             let t = trace.clone();
             let dtx = done_tx.clone();
             submitters.push(std::thread::spawn(move || {
-                c.submit(AnalysisJob {
-                    id: 100 + i,
-                    trace: t,
-                    config: AnalysisConfig::default(),
-                });
+                c.submit(job(100 + i, &t));
                 let _ = dtx.send(());
             }));
         }
@@ -378,5 +603,162 @@ mod tests {
         assert_eq!(coord.stats.completed.load(Ordering::Relaxed), 4);
         assert_eq!(coord.stats.failed.load(Ordering::Relaxed), 0);
         coord.shutdown();
+    }
+
+    /// Satellite regression: a zero/degenerate wall must yield 0.0,
+    /// not inf or NaN.
+    #[test]
+    fn throughput_is_zero_on_degenerate_wall() {
+        let stats = CoordinatorStats::default();
+        stats.completed.store(10, Ordering::Relaxed);
+        assert_eq!(stats.throughput(Duration::ZERO), 0.0);
+        assert_eq!(stats.throughput(Duration::from_nanos(0)), 0.0);
+        let t = stats.throughput(Duration::from_secs(2));
+        assert!((t - 5.0).abs() < 1e-12);
+        // No completions is a plain 0, not NaN.
+        let empty = CoordinatorStats::default();
+        assert_eq!(empty.throughput(Duration::from_secs(1)), 0.0);
+    }
+
+    /// Satellite regression: `try_submit` must reject (typed, job
+    /// returned) instead of parking. The overflow attempt runs on a
+    /// watchdog thread so a regression into blocking fails the
+    /// `recv_timeout` below rather than hanging the suite.
+    #[test]
+    fn try_submit_rejects_when_full_without_deadlock() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let factory = move || {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
+        };
+        let (coord, rx) = Coordinator::start(1, 2, factory);
+        let trace = Arc::new(simulate(&synthetic(4, 4, &[], 11), 11));
+        assert!(coord.try_submit(job(0, &trace)).is_ok());
+        assert!(coord.try_submit(job(1, &trace)).is_ok());
+
+        let coord = Arc::new(coord);
+        let c = coord.clone();
+        let t = trace.clone();
+        let (vtx, vrx) = std::sync::mpsc::channel();
+        let watchdog = std::thread::spawn(move || {
+            let verdict = c.try_submit(job(2, &t));
+            let _ = vtx.send(verdict.is_err());
+        });
+        let rejected = vrx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("try_submit blocked on a full queue");
+        assert!(rejected, "try_submit accepted past the cap");
+        watchdog.join().unwrap();
+
+        // The error is typed and hands the job back.
+        match coord.try_submit(job(3, &trace)) {
+            Err(e) => {
+                assert_eq!(e.job.id, 3);
+                assert_eq!(e.cap, 2);
+                assert!(e.to_string().contains("full"), "{e}");
+            }
+            Ok(()) => panic!("queue should still be full"),
+        }
+
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for _ in 0..2 {
+            rx.recv().unwrap();
+        }
+        // Drained: try_submit succeeds again.
+        assert!(coord.try_submit(job(4, &trace)).is_ok());
+        rx.recv().unwrap();
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown(),
+            Err(_) => panic!("coordinator still shared after joins"),
+        }
+    }
+
+    /// `submit_batch` spreads a batch across shards (locking each once
+    /// per chunk), overflows gracefully past the total cap, and every
+    /// job still completes exactly once.
+    #[test]
+    fn submit_batch_distributes_and_drains() {
+        let (coord, rx) = Coordinator::start(4, 16, native_factory);
+        assert_eq!(coord.shards(), 4);
+        let n = 32u64;
+        let mut batch = Vec::new();
+        for i in 0..n {
+            let spec = synthetic(4, 4, &[], i);
+            batch.push(AnalysisJob {
+                id: i,
+                trace: Arc::new(simulate(&spec, i)),
+                config: AnalysisConfig::default(),
+            });
+        }
+        // 32 jobs > total cap 16: the batch path must block-and-resume
+        // rather than overflow any shard bound.
+        coord.submit_batch(batch);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n {
+            seen.insert(rx.recv().expect("outcome").id);
+        }
+        assert_eq!(seen.len(), n as usize);
+        assert_eq!(coord.stats.submitted.load(Ordering::Relaxed), n);
+        assert_eq!(coord.queued(), 0);
+        coord.shutdown();
+    }
+
+    /// A hot shard must not strand the sibling worker: every job below
+    /// hashes to shard 0, so any completion by worker 1 is a steal.
+    /// Retried a few times to absorb scheduler noise.
+    #[test]
+    fn idle_workers_steal_from_a_hot_shard() {
+        for attempt in 0..3 {
+            let ready = Arc::new(AtomicU64::new(0));
+            let r = ready.clone();
+            let factory = move || {
+                r.fetch_add(1, Ordering::SeqCst);
+                Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
+            };
+            let (coord, rx) = Coordinator::start(2, 64, factory);
+            // Both workers up (and about to park) before we flood.
+            while ready.load(Ordering::SeqCst) < 2 {
+                std::thread::yield_now();
+            }
+            let mut ids = Vec::new();
+            let mut id = 0u64;
+            while ids.len() < 7 {
+                if coord.shard_of(id) == 0 {
+                    ids.push(id);
+                }
+                id += 1;
+            }
+            let big = Arc::new(simulate(
+                &synthetic(16, 24, &[(3, Inject::Imbalance)], 5),
+                5,
+            ));
+            let small = Arc::new(simulate(&synthetic(8, 12, &[], 5), 5));
+            let before = crate::obs_counter!("coordinator_steals_total").get();
+            let batch: Vec<AnalysisJob> = ids
+                .iter()
+                .enumerate()
+                .map(|(k, &jid)| job(jid, if k == 0 { &big } else { &small }))
+                .collect();
+            let n = batch.len();
+            coord.submit_batch(batch);
+            for _ in 0..n {
+                assert!(rx.recv().expect("outcome").error.is_none());
+            }
+            coord.shutdown();
+            let stolen = crate::obs_counter!("coordinator_steals_total").get() - before;
+            if stolen >= 1 {
+                return;
+            }
+            assert!(attempt < 2, "no steals observed across retries");
+        }
     }
 }

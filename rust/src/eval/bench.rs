@@ -101,6 +101,24 @@ impl Bench {
         mean
     }
 
+    /// Record an externally measured case. Benches that time a whole
+    /// scenario themselves (e.g. end-to-end coordinator throughput
+    /// runs, where one "iteration" is a full service lifecycle) still
+    /// land in the same report and `BENCH_JSON_OUT` summary as `run`
+    /// cases. `std` is unknown for such one-shot measurements and
+    /// recorded as 0.
+    pub fn push_case(&mut self, case: &str, iters: u64, mean: f64, p50: f64, p99: f64) {
+        crate::obs_counter!("bench_cases_total").inc();
+        self.results.push(CaseResult {
+            name: case.to_string(),
+            iters,
+            mean,
+            std: 0.0,
+            p50,
+            p99,
+        });
+    }
+
     /// Bench report followed by the process-wide metrics dump, so a
     /// bench run doubles as an instrumentation smoke test (the pipeline
     /// and cluster counters it drove are visible next to its numbers).
@@ -181,6 +199,18 @@ mod tests {
         let full = b.report_with_metrics();
         assert!(full.contains("bench_cases_total"));
         assert!(full.contains("bench_case_seconds"));
+    }
+
+    #[test]
+    fn pushed_cases_join_the_report() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("push-demo");
+        b.push_case("manual scenario", 12, 0.5, 0.4, 0.9);
+        let rep = b.report();
+        assert!(rep.contains("manual scenario"));
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].iters, 12);
+        assert_eq!(b.results()[0].std, 0.0);
     }
 
     #[test]

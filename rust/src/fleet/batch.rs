@@ -1,0 +1,138 @@
+//! `analyze_batch` — the fleet front door.
+//!
+//! Runs the full per-trace pipeline over many traces, but hoists the
+//! backend's distance-matrix dispatches out of the per-trace loop when
+//! the backend can fuse them (`supports_batched_dispatch`, i.e. PJRT):
+//! every session's performance matrix for a given metric view is packed
+//! into bucket-padded batched dispatches (see [`crate::fleet::pack`]),
+//! and the sliced-out per-trace distance matrices are seeded back into
+//! each trace's `AnalysisSession` cache. The per-trace analysis then
+//! proceeds unchanged — every memoization and report field is identical
+//! to the sequential path, which the `fleet_equivalence` property test
+//! pins down.
+//!
+//! On the native backend fusing buys nothing, so the batch path is a
+//! plain loop over `analyze` — trivially report-identical.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::analysis::pipeline::{analyze_session, AnalysisConfig};
+use crate::analysis::session::AnalysisSession;
+use crate::cluster::ClusterBackend;
+use crate::fleet::report::FleetReport;
+use crate::metrics::{Metric, MetricView};
+use crate::trace::Trace;
+use crate::util::matrix::Matrix;
+
+/// Metric views whose distance matrices the pipeline will request:
+/// the dissimilarity view, plus the five rough-set condition
+/// attributes when root causes are on.
+fn distance_views(config: &AnalysisConfig) -> Vec<MetricView> {
+    let mut views = vec![config.dissimilarity_view];
+    if config.root_causes {
+        views.extend(Metric::rough_set_attrs().map(MetricView::Plain));
+    }
+    let mut seen = HashSet::new();
+    views.retain(|v| seen.insert(*v));
+    views
+}
+
+/// Analyze a fleet of traces. Report-identical to calling
+/// [`crate::analysis::pipeline::analyze`] on each trace in order; on
+/// batching backends the distance matrices are computed in packed
+/// dispatches first and seeded into the per-trace sessions.
+pub fn analyze_batch(
+    traces: &[Arc<Trace>],
+    backend: &dyn ClusterBackend,
+    config: &AnalysisConfig,
+) -> Result<FleetReport> {
+    let span = crate::obs_span!("fleet_analyze_batch_seconds");
+    crate::obs_histogram!("fleet_batch_size").observe(traces.len() as f64);
+    crate::obs_counter!("fleet_traces_total").add(traces.len() as u64);
+
+    let sessions: Vec<AnalysisSession> = traces
+        .iter()
+        .map(|t| AnalysisSession::new(t.clone()))
+        .collect();
+
+    if backend.supports_batched_dispatch() && sessions.len() > 1 {
+        for view in distance_views(config) {
+            let mats: Vec<Arc<Matrix>> =
+                sessions.iter().map(|s| s.matrix(view)).collect();
+            let refs: Vec<&Matrix> = mats.iter().map(|m| m.as_ref()).collect();
+            let dists = backend.pairwise_dists_batch(&refs)?;
+            crate::obs_counter!("fleet_dispatch_total").inc();
+            for (session, d) in sessions.iter().zip(dists) {
+                session.seed_distances(backend, view, Arc::new(d));
+            }
+        }
+    }
+
+    let mut reports = Vec::with_capacity(sessions.len());
+    for session in &sessions {
+        reports.push(analyze_session(session, backend, config)?);
+    }
+    span.stop();
+    Ok(FleetReport::from_reports(reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::pipeline::analyze;
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::synthetic::{synthetic, Inject};
+
+    #[test]
+    fn distance_views_cover_dissimilarity_plus_attrs() {
+        let cfg = AnalysisConfig::default();
+        let views = distance_views(&cfg);
+        assert_eq!(views.len(), 6);
+        assert_eq!(views[0], cfg.dissimilarity_view);
+        // With root causes off only the dissimilarity view remains.
+        let lean = AnalysisConfig {
+            root_causes: false,
+            ..cfg
+        };
+        assert_eq!(distance_views(&lean).len(), 1);
+        // A dissimilarity view that *is* an attribute dedups.
+        let overlapping = AnalysisConfig {
+            dissimilarity_view: MetricView::Plain(Metric::L1MissRate),
+            ..cfg
+        };
+        assert_eq!(distance_views(&overlapping).len(), 5);
+    }
+
+    #[test]
+    fn batch_matches_sequential_on_native() {
+        let cfg = AnalysisConfig::default();
+        let traces: Vec<Arc<Trace>> = (0..3)
+            .map(|i| {
+                let inj = if i == 0 {
+                    vec![(2usize, Inject::Imbalance)]
+                } else {
+                    vec![]
+                };
+                Arc::new(simulate(&synthetic(4, 6, &inj, i as u64), i as u64))
+            })
+            .collect();
+        let fleet = analyze_batch(&traces, &NativeBackend, &cfg).unwrap();
+        assert_eq!(fleet.reports.len(), 3);
+        for (trace, got) in traces.iter().zip(&fleet.reports) {
+            let want = analyze(trace, &NativeBackend, &cfg).unwrap();
+            assert_eq!(got.render(), want.render());
+        }
+    }
+
+    #[test]
+    fn empty_batch_yields_empty_report() {
+        let fleet =
+            analyze_batch(&[], &NativeBackend, &AnalysisConfig::default()).unwrap();
+        assert!(fleet.reports.is_empty());
+        assert!(fleet.all_clean());
+    }
+}

@@ -1,0 +1,29 @@
+//! Fleet triage: batched multi-trace analysis.
+//!
+//! The paper analyzes one SPMD run at a time; a cluster deployment
+//! sees *fleets* of runs, and cross-run comparison is where automated
+//! debugging pays off. This subsystem turns the per-trace pipeline
+//! into a triage plane:
+//!
+//! - [`pack`] — pure planning of bucket-padded packed dispatches
+//!   (several traces' performance matrices stacked into one shape-
+//!   static PJRT execution);
+//! - [`batch`] — [`analyze_batch`]: run the pipeline over a fleet,
+//!   fusing the distance-matrix dispatches on batching backends while
+//!   staying report-identical to the sequential path;
+//! - [`report`] — [`FleetReport`]: group traces by bottleneck
+//!   signature (same clusters, same CCRs, same rough-set causes), so
+//!   one fix can be matched to every run it covers.
+//!
+//! Observability: `fleet_batch_size` / `fleet_analyze_batch_seconds`
+//! histograms, `fleet_dispatch_total` / `fleet_traces_total` counters.
+//! The service side (sharded queue, `submit_batch`) lives in
+//! [`crate::coordinator`].
+
+pub mod batch;
+pub mod pack;
+pub mod report;
+
+pub use batch::analyze_batch;
+pub use pack::{plan_packs, Pack};
+pub use report::{signature_of, BottleneckSignature, FleetReport};

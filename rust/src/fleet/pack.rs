@@ -1,0 +1,174 @@
+//! Bucket packing for batched pairwise dispatches.
+//!
+//! PJRT artifacts are shape-static: every dispatch pads its input up
+//! to a manifest bucket anyway. When a fleet of traces needs distance
+//! matrices for the same metric view, we can therefore stack several
+//! per-trace performance matrices row-wise into *one* bucket-padded
+//! input and dispatch once. Zero column padding leaves within-block
+//! Euclidean distances untouched, and the cross-block entries of the
+//! result are simply discarded, so the sliced-out diagonal blocks are
+//! exactly the per-trace distance matrices.
+//!
+//! This module is the pure planning half: given item dims and the
+//! available buckets, produce [`Pack`]s — which items share a dispatch,
+//! at which row offsets, into which bucket. First-fit-decreasing by
+//! rows, then the smallest bucket that fits each finished pack.
+
+use anyhow::{bail, Result};
+
+/// One planned dispatch: `items` (indices into the caller's slice)
+/// stacked at `offsets` into a `bucket.0 × bucket.1` input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pack {
+    /// Bucket dims `(rows, cols)` this pack dispatches on — the
+    /// smallest available bucket that fits the stacked items.
+    pub bucket: (usize, usize),
+    /// Item indices in stacking order.
+    pub items: Vec<usize>,
+    /// Row offset of each item in the stacked input (parallel to
+    /// `items`; offsets are contiguous: `offsets[k+1] == offsets[k] +
+    /// dims[items[k]].0`).
+    pub offsets: Vec<usize>,
+}
+
+/// Smallest bucket holding `rows × cols`, or `None`.
+fn fitting_bucket(buckets: &[(usize, usize)], rows: usize, cols: usize) -> Option<(usize, usize)> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&(bm, bn)| bm >= rows && bn >= cols)
+        .min()
+}
+
+/// Plan packed dispatches for items of the given `(rows, cols)` dims
+/// over the available `buckets`. Every item lands in exactly one pack;
+/// items whose dims fit no bucket are an error (the caller chunks or
+/// falls back to per-item dispatch). Zero-row items are skipped — their
+/// distance matrix is empty and needs no dispatch.
+pub fn plan_packs(
+    dims: &[(usize, usize)],
+    buckets: &[(usize, usize)],
+) -> Result<Vec<Pack>> {
+    if buckets.is_empty() {
+        bail!("no buckets available for packing");
+    }
+    // First-fit-decreasing: big items first so stragglers fill gaps.
+    let mut order: Vec<usize> = (0..dims.len()).filter(|&i| dims[i].0 > 0).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(dims[i].0));
+
+    struct Open {
+        items: Vec<usize>,
+        rows: usize,
+        cols: usize,
+    }
+    let mut open: Vec<Open> = Vec::new();
+    for i in order {
+        let (m, n) = dims[i];
+        if fitting_bucket(buckets, m, n).is_none() {
+            bail!(
+                "item {i} ({m}x{n}) fits no pairwise bucket (max {:?})",
+                buckets.iter().max()
+            );
+        }
+        let slot = open.iter_mut().find(|p| {
+            fitting_bucket(buckets, p.rows + m, p.cols.max(n)).is_some()
+        });
+        match slot {
+            Some(p) => {
+                p.items.push(i);
+                p.rows += m;
+                p.cols = p.cols.max(n);
+            }
+            None => open.push(Open {
+                items: vec![i],
+                rows: m,
+                cols: n,
+            }),
+        }
+    }
+
+    Ok(open
+        .into_iter()
+        .map(|p| {
+            let bucket = fitting_bucket(buckets, p.rows, p.cols)
+                .expect("every placement was fit-checked");
+            let mut offsets = Vec::with_capacity(p.items.len());
+            let mut off = 0;
+            for &i in &p.items {
+                offsets.push(off);
+                off += dims[i].0;
+            }
+            Pack {
+                bucket,
+                items: p.items,
+                offsets,
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: &[(usize, usize)] = &[(8, 16), (32, 64), (128, 64)];
+
+    #[test]
+    fn small_items_share_one_small_bucket() {
+        let packs = plan_packs(&[(3, 5), (4, 6)], BUCKETS).unwrap();
+        assert_eq!(packs.len(), 1);
+        let p = &packs[0];
+        assert_eq!(p.bucket, (8, 16));
+        // FFD stacks the 4-row item first.
+        assert_eq!(p.items, vec![1, 0]);
+        assert_eq!(p.offsets, vec![0, 4]);
+    }
+
+    #[test]
+    fn overflow_opens_a_second_pack() {
+        // Three 60-row items: two fill a 128-bucket, the third spills.
+        let packs = plan_packs(&[(60, 8), (60, 8), (60, 8)], BUCKETS).unwrap();
+        assert_eq!(packs.len(), 2);
+        let total: usize = packs.iter().map(|p| p.items.len()).sum();
+        assert_eq!(total, 3);
+        for p in &packs {
+            // Offsets are contiguous row spans.
+            let mut off = 0;
+            for (k, _) in p.items.iter().enumerate() {
+                assert_eq!(p.offsets[k], off);
+                off += 60;
+            }
+            assert!(off <= p.bucket.0);
+        }
+    }
+
+    #[test]
+    fn wide_item_forces_wide_bucket() {
+        let packs = plan_packs(&[(4, 40)], BUCKETS).unwrap();
+        assert_eq!(packs[0].bucket, (32, 64));
+    }
+
+    #[test]
+    fn oversize_item_is_an_error() {
+        assert!(plan_packs(&[(200, 8)], BUCKETS).is_err());
+        assert!(plan_packs(&[(4, 100)], BUCKETS).is_err());
+        assert!(plan_packs(&[(4, 4)], &[]).is_err());
+    }
+
+    #[test]
+    fn zero_row_items_are_skipped() {
+        let packs = plan_packs(&[(0, 4), (3, 4)], BUCKETS).unwrap();
+        assert_eq!(packs.len(), 1);
+        assert_eq!(packs[0].items, vec![1]);
+    }
+
+    #[test]
+    fn every_item_lands_exactly_once() {
+        let dims: Vec<(usize, usize)> =
+            (0..17).map(|i| (1 + (i * 7) % 30, 1 + (i * 5) % 20)).collect();
+        let packs = plan_packs(&dims, BUCKETS).unwrap();
+        let mut seen: Vec<usize> = packs.iter().flat_map(|p| p.items.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..17).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,236 @@
+//! `FleetReport` — cross-trace aggregation of per-trace analyses.
+//!
+//! The per-trace `AnalysisReport` answers "what is wrong with this
+//! run"; the fleet layer answers "which runs are wrong *the same way*".
+//! Traces are grouped by bottleneck signature: the dissimilarity
+//! verdict (cluster count + CCCR set + rough-set causes) joined with
+//! the disparity verdict (CCR set + causes). Two traces share a
+//! signature exactly when the paper's pipeline drew the same
+//! conclusions about both, so one fix likely covers the whole group.
+
+use crate::analysis::pipeline::AnalysisReport;
+use crate::util::json::Json;
+use crate::util::tables::Table;
+
+/// One group of traces that triaged identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BottleneckSignature {
+    /// Canonical signature string (grouping key, human-readable).
+    pub signature: String,
+    /// Indices into [`FleetReport::reports`], in submission order.
+    pub members: Vec<usize>,
+}
+
+/// Canonical bottleneck signature of one report. Region ids and cause
+/// names are rendered in their stable pipeline order, so identical
+/// conclusions always produce identical strings.
+pub fn signature_of(report: &AnalysisReport) -> String {
+    let regions = |ids: &[crate::regions::RegionId]| {
+        ids.iter()
+            .map(|r| r.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let dissim = if report.dissimilarity.exists() {
+        let causes = report
+            .dissimilarity_causes
+            .as_ref()
+            .map(|rc| rc.cause_names().join("+"))
+            .unwrap_or_default();
+        format!(
+            "dissim[k={} cccr={{{}}} causes={{{}}}]",
+            report.dissimilarity.clustering.num_clusters(),
+            regions(&report.dissimilarity.cccrs),
+            causes
+        )
+    } else {
+        "dissim[none]".to_string()
+    };
+    let disp = if report.disparity.exists() {
+        let causes = report
+            .disparity_causes
+            .as_ref()
+            .map(|rc| rc.cause_names().join("+"))
+            .unwrap_or_default();
+        format!(
+            "disp[ccr={{{}}} causes={{{}}}]",
+            regions(&report.disparity.ccrs),
+            causes
+        )
+    } else {
+        "disp[none]".to_string()
+    };
+    format!("{dissim} {disp}")
+}
+
+/// The fleet triage result: every per-trace report, plus the
+/// signature groups (largest first).
+#[derive(Debug)]
+pub struct FleetReport {
+    pub reports: Vec<AnalysisReport>,
+    pub signatures: Vec<BottleneckSignature>,
+}
+
+impl FleetReport {
+    /// Group `reports` by bottleneck signature.
+    pub fn from_reports(reports: Vec<AnalysisReport>) -> FleetReport {
+        let mut signatures: Vec<BottleneckSignature> = Vec::new();
+        for (i, r) in reports.iter().enumerate() {
+            let sig = signature_of(r);
+            match signatures.iter_mut().find(|s| s.signature == sig) {
+                Some(s) => s.members.push(i),
+                None => signatures.push(BottleneckSignature {
+                    signature: sig,
+                    members: vec![i],
+                }),
+            }
+        }
+        // Largest group first; signature string breaks ties so the
+        // order is deterministic.
+        signatures.sort_by(|a, b| {
+            b.members
+                .len()
+                .cmp(&a.members.len())
+                .then_with(|| a.signature.cmp(&b.signature))
+        });
+        FleetReport {
+            reports,
+            signatures,
+        }
+    }
+
+    /// True when no trace in the fleet showed either bottleneck kind.
+    pub fn all_clean(&self) -> bool {
+        self.reports
+            .iter()
+            .all(|r| !r.dissimilarity.exists() && !r.disparity.exists())
+    }
+
+    /// Human-readable triage table: one row per signature group.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "=== Fleet triage: {} traces, {} signatures ===\n",
+            self.reports.len(),
+            self.signatures.len()
+        );
+        let mut table = Table::new(
+            "bottleneck signatures (largest group first)",
+            &["traces", "programs", "signature"],
+        );
+        for s in &self.signatures {
+            let programs: Vec<&str> = s
+                .members
+                .iter()
+                .map(|&i| self.reports[i].program.as_str())
+                .collect();
+            table.row(&[
+                s.members.len().to_string(),
+                programs.join(","),
+                s.signature.clone(),
+            ]);
+        }
+        out.push_str(&table.render());
+        out
+    }
+
+    /// Structured form: signature groups plus each member's
+    /// `run_report()`.
+    pub fn to_json(&self) -> Json {
+        let signatures = Json::Arr(
+            self.signatures
+                .iter()
+                .map(|s| {
+                    Json::obj()
+                        .push("signature", Json::Str(s.signature.clone()))
+                        .push("count", Json::Num(s.members.len() as f64))
+                        .push(
+                            "members",
+                            Json::Arr(
+                                s.members.iter().map(|&i| Json::Num(i as f64)).collect(),
+                            ),
+                        )
+                })
+                .collect(),
+        );
+        let reports =
+            Json::Arr(self.reports.iter().map(|r| r.run_report()).collect());
+        Json::obj()
+            .push("traces", Json::Num(self.reports.len() as f64))
+            .push("signatures", signatures)
+            .push("reports", reports)
+    }
+
+    /// One-line summary (used by the `triage` subcommand's log).
+    pub fn summary(&self) -> String {
+        match self.signatures.first() {
+            Some(top) => format!(
+                "fleet: {} traces, {} signatures; top group {} traces: {}",
+                self.reports.len(),
+                self.signatures.len(),
+                top.members.len(),
+                top.signature
+            ),
+            None => "fleet: 0 traces".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::analysis::pipeline::{analyze, AnalysisConfig};
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::synthetic::{synthetic, Inject};
+
+    #[test]
+    fn identical_conclusions_share_a_signature() {
+        let cfg = AnalysisConfig::default();
+        let hot = Arc::new(simulate(
+            &synthetic(4, 6, &[(2, Inject::Imbalance)], 9),
+            9,
+        ));
+        let clean = Arc::new(simulate(&synthetic(4, 6, &[], 11), 11));
+        let r0 = analyze(&hot, &NativeBackend, &cfg).unwrap();
+        let r1 = analyze(&clean, &NativeBackend, &cfg).unwrap();
+        let r2 = analyze(&hot, &NativeBackend, &cfg).unwrap();
+        let fleet = FleetReport::from_reports(vec![r0, r1, r2]);
+        assert_eq!(fleet.reports.len(), 3);
+        assert_eq!(fleet.signatures.len(), 2, "{:#?}", fleet.signatures);
+        // The two hot traces group together and sort first.
+        assert_eq!(fleet.signatures[0].members, vec![0, 2]);
+        assert!(fleet.signatures[0].signature.contains("dissim[k="));
+        assert_eq!(fleet.signatures[1].members, vec![1]);
+        assert!(!fleet.all_clean());
+
+        let text = fleet.render();
+        assert!(text.contains("Fleet triage: 3 traces, 2 signatures"));
+        let parsed = Json::parse(&fleet.to_json().pretty()).unwrap();
+        assert_eq!(parsed.get("traces").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(
+            parsed
+                .get("signatures")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.len()),
+            Some(2)
+        );
+        assert_eq!(
+            parsed
+                .get("reports")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.len()),
+            Some(3)
+        );
+        assert!(fleet.summary().contains("3 traces"));
+    }
+
+    #[test]
+    fn empty_fleet_is_clean() {
+        let fleet = FleetReport::from_reports(Vec::new());
+        assert!(fleet.all_clean());
+        assert_eq!(fleet.summary(), "fleet: 0 traces");
+        assert_eq!(fleet.signatures.len(), 0);
+    }
+}

@@ -29,6 +29,17 @@
 //! counters). [`coordinator`] jobs carry the same `Arc<Trace>`, so
 //! submitting a job is an `Arc` bump, not a deep copy.
 //!
+//! Above the per-trace path sits the fleet plane: [`fleet::analyze_batch`]
+//! packs many sessions' performance matrices into bucket-padded batched
+//! backend dispatches (`fleet::pack` plans them; the PJRT runtime pads
+//! to shape-static buckets anyway, so stacking traces amortizes the
+//! padding), seeds each session's distance cache with the sliced-out
+//! blocks, and aggregates the per-trace reports into cross-trace
+//! bottleneck signatures ([`fleet::FleetReport`]). The [`coordinator`]'s
+//! queue is sharded per worker (hashed by job id, work-stealing pops,
+//! `submit_batch`/`try_submit` front doors) so fleet-scale submission
+//! does not serialize on one lock.
+//!
 //! The clustering hot spot executes JAX/Pallas AOT artifacts through
 //! PJRT (`runtime`, `cluster::PjrtBackend`) with a numerically equivalent
 //! native fallback (`cluster::NativeBackend`). The `obs` module is the
@@ -54,6 +65,7 @@ pub mod analysis;
 pub mod cluster;
 pub mod coordinator;
 pub mod eval;
+pub mod fleet;
 pub mod metrics;
 pub mod obs;
 pub mod regions;

@@ -6,6 +6,7 @@
 //!   analyze-trace  run the pipeline over a saved trace (JSON or XML)
 //!   simulate       simulate a workload and save the trace
 //!   serve          coordinator service demo: stream analysis jobs
+//!   triage         fleet triage: batch-analyze many traces, group by signature
 //!   list           list workloads and experiments
 //!
 //! `--backend auto|native|pjrt` selects the clustering engine; `auto`
@@ -21,6 +22,7 @@ use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
 use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
 use autoanalyzer::eval::{run_experiment, EXPERIMENTS};
+use autoanalyzer::fleet::analyze_batch;
 use autoanalyzer::simulator::engine::simulate;
 use autoanalyzer::trace::{json_codec, xml_codec, Trace};
 use autoanalyzer::util::cli::Args;
@@ -42,6 +44,7 @@ USAGE:
   autoanalyzer analyze-trace <FILE> [--backend ...]
   autoanalyzer simulate --workload <name> [--seed N] --out FILE [--format json|xml]
   autoanalyzer serve [--jobs N] [--workers K] [--backend ...] [--metrics]
+  autoanalyzer triage [FILE ...] [--synthetic N] [--seed N] [--backend ...] [--json]
   autoanalyzer list
 
 WORKLOADS:
@@ -271,6 +274,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_triage(args: &Args) -> Result<()> {
+    let backend = select_backend(
+        args.str_or("backend", "auto"),
+        args.str_or("artifacts", "artifacts"),
+    )?;
+    let mut traces: Vec<Arc<Trace>> = Vec::new();
+    let mut i = 1;
+    while let Some(path) = args.positional(i) {
+        traces.push(Arc::new(load_trace(path)?));
+        i += 1;
+    }
+    if traces.is_empty() {
+        // No files: triage a synthetic fleet (mixed injections), the
+        // quickest way to see signature grouping in action.
+        let n = args.usize_or("synthetic", 8)?;
+        let seed = args.u64_or("seed", 2011)?;
+        for k in 0..n as u64 {
+            let inj = match k % 4 {
+                0 | 2 => vec![(2usize, Inject::Imbalance)],
+                1 => vec![(3usize, Inject::DiskHog)],
+                _ => vec![],
+            };
+            let spec = synthetic(8, 12, &inj, seed + k);
+            traces.push(Arc::new(simulate(&spec, seed + k)));
+        }
+        autoanalyzer::log_info!("no trace files given; triaging {n} synthetic runs");
+    }
+    let start = Instant::now();
+    let fleet = analyze_batch(&traces, backend.as_ref(), &AnalysisConfig::default())?;
+    if args.flag("json") {
+        println!("{}", fleet.to_json().pretty());
+    } else {
+        println!("{}", fleet.render());
+    }
+    autoanalyzer::log_info!(
+        "{} in {:.1} ms on the {} backend",
+        fleet.summary(),
+        start.elapsed().as_secs_f64() * 1e3,
+        backend.name()
+    );
+    Ok(())
+}
+
 fn cmd_list() {
     println!("workloads: st, st-fine, npar1way, mpibzip2, synthetic");
     println!("experiments:");
@@ -280,7 +326,7 @@ fn cmd_list() {
 }
 
 fn main() {
-    let args = match Args::from_env(&["help", "metrics"]) {
+    let args = match Args::from_env(&["help", "metrics", "json"]) {
         Ok(a) => a,
         Err(e) => {
             autoanalyzer::log_error!("bad arguments: {e}");
@@ -294,6 +340,7 @@ fn main() {
         Some("analyze-trace") => cmd_analyze_trace(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("triage") => cmd_triage(&args),
         Some("list") => {
             cmd_list();
             Ok(())

@@ -237,6 +237,81 @@ impl PjrtRuntime {
         Ok(Matrix::from_vec(bm, bm, vals).slice_to(m, m))
     }
 
+    /// Euclidean distance matrices for several inputs, packed into as
+    /// few bucket-padded dispatches as the manifest allows.
+    ///
+    /// Since every dispatch pads its input up to a shape-static bucket
+    /// anyway, several small matrices can share one bucket: stack them
+    /// row-wise (zero column padding leaves within-block distances
+    /// untouched), execute once, and slice each item's diagonal block
+    /// back out of the result — the cross-block entries are discarded.
+    /// Positionally identical to calling [`Self::pairwise_dists`] on
+    /// each input.
+    pub fn pairwise_dists_packed(&self, xs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let buckets: Vec<(usize, usize)> =
+            self.pairwise.iter().map(|(k, _)| *k).collect();
+        let dims: Vec<(usize, usize)> =
+            xs.iter().map(|x| (x.rows(), x.cols())).collect();
+        let packs = crate::fleet::pack::plan_packs(&dims, &buckets)?;
+
+        // Zero-row items are skipped by the planner; their distance
+        // matrix is empty.
+        let mut out: Vec<Matrix> = dims
+            .iter()
+            .map(|_| Matrix::zeros(0, 0))
+            .collect();
+        for pack in &packs {
+            let (bm, bn) = pack.bucket;
+            let entry = self
+                .pairwise
+                .iter()
+                .find(|(k, _)| *k == pack.bucket)
+                .map(|(_, e)| e)
+                .ok_or_else(|| anyhow!("planned bucket {:?} missing", pack.bucket))?;
+            let exe = self.executable(&entry.file)?;
+
+            let mut stacked = Matrix::zeros(bm, bn);
+            let mut mask = vec![0.0f32; bm];
+            let mut payload = 0usize;
+            for (&item, &off) in pack.items.iter().zip(&pack.offsets) {
+                let x = xs[item];
+                for r in 0..x.rows() {
+                    stacked.row_mut(off + r)[..x.cols()].copy_from_slice(x.row(r));
+                    mask[off + r] = 1.0;
+                }
+                payload += x.rows() * x.cols();
+            }
+            self.stats
+                .padded_elems
+                .fetch_add((bm * bn - payload) as u64, Ordering::Relaxed);
+
+            let x_lit = xla::Literal::vec1(stacked.data())
+                .reshape(&[bm as i64, bn as i64])
+                .map_err(|e| anyhow!("reshape packed x: {e:?}"))?;
+            let mask_lit = xla::Literal::vec1(&mask);
+            let result = exe
+                .execute::<xla::Literal>(&[x_lit, mask_lit])
+                .map_err(|e| anyhow!("executing packed pairwise: {e:?}"))?;
+            self.stats.executions.fetch_add(1, Ordering::Relaxed);
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching packed pairwise result: {e:?}"))?;
+            let full = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let vals: Vec<f32> = full.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            let full = Matrix::from_vec(bm, bm, vals);
+
+            for (&item, &off) in pack.items.iter().zip(&pack.offsets) {
+                let m = xs[item].rows();
+                let mut d = Matrix::zeros(m, m);
+                for r in 0..m {
+                    d.row_mut(r).copy_from_slice(&full.row(off + r)[off..off + m]);
+                }
+                out[item] = d;
+            }
+        }
+        Ok(out)
+    }
+
     /// Fixed-iteration 1-D k-means into the five severity bands.
     ///
     /// `init` must have exactly `SEVERITY_K` centroids; use

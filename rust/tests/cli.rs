@@ -107,6 +107,62 @@ fn reproduce_single_experiment() {
 }
 
 #[test]
+fn triage_groups_a_synthetic_fleet() {
+    let out = bin()
+        .args(["triage", "--synthetic", "6", "--backend", "native"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Fleet triage: 6 traces"));
+    assert!(text.contains("bottleneck signatures"));
+}
+
+#[test]
+fn triage_json_over_saved_traces() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = dir.join("triage-a.json");
+    let b = dir.join("triage-b.json");
+    for (path, seed) in [(&a, "3"), (&b, "4")] {
+        assert!(bin()
+            .args([
+                "simulate",
+                "--workload",
+                "synthetic",
+                "--inject",
+                "imbalance",
+                "--seed",
+                seed,
+                "--out",
+                path.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap()
+            .status
+            .success());
+    }
+    let out = bin()
+        .args([
+            "triage",
+            a.to_str().unwrap(),
+            b.to_str().unwrap(),
+            "--backend",
+            "native",
+            "--json",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let doc = autoanalyzer::util::json::Json::parse(&text).expect("valid JSON");
+    assert_eq!(doc.get("traces").and_then(|v| v.as_usize()), Some(2));
+    assert!(doc.get("signatures").and_then(|v| v.as_arr()).is_some());
+    std::fs::remove_file(&a).ok();
+    std::fs::remove_file(&b).ok();
+}
+
+#[test]
 fn unknown_workload_fails_cleanly() {
     let out = bin()
         .args(["analyze", "--workload", "doom"])

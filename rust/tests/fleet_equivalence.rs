@@ -1,0 +1,98 @@
+//! Property: `fleet::analyze_batch` over N synthetic traces is
+//! report-identical to N sequential `analyze` calls on the native
+//! backend. `AnalysisReport::render()` excludes timings, so string
+//! equality compares every analytical conclusion (clusters, CCCRs,
+//! severity bands, root causes) and nothing incidental.
+
+use std::sync::Arc;
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::fleet::{analyze_batch, signature_of};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::util::prop::forall;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+/// (nprocs, nregions, injection kind, injected region, sim seed) — a
+/// Debug-able descriptor so failing cases print a reproducible fleet.
+type TraceSpec = (usize, usize, usize, usize, u64);
+
+fn build(spec: &TraceSpec) -> Arc<Trace> {
+    let &(nprocs, nregions, kind, region, seed) = spec;
+    let injections: Vec<(usize, Inject)> = match kind {
+        0 => vec![(region, Inject::Imbalance)],
+        1 => vec![(region, Inject::DiskHog)],
+        2 => vec![(region, Inject::NetHog)],
+        3 => vec![(region, Inject::CacheThrash)],
+        4 => vec![(region, Inject::InstrHog)],
+        _ => vec![], // clean run
+    };
+    Arc::new(simulate(&synthetic(nprocs, nregions, &injections, seed), seed))
+}
+
+#[test]
+fn analyze_batch_matches_sequential_analyze() {
+    forall(
+        "analyze_batch == N sequential analyze calls",
+        |rng| {
+            let ntraces = rng.range(1, 4);
+            (0..ntraces)
+                .map(|_| {
+                    let nprocs = rng.range(4, 8);
+                    let nregions = rng.range(6, 12);
+                    let kind = rng.below(6);
+                    let region = rng.range(2, nregions - 1);
+                    let seed = rng.next_u64() % 100_000;
+                    (nprocs, nregions, kind, region, seed)
+                })
+                .collect::<Vec<TraceSpec>>()
+        },
+        |specs| {
+            let traces: Vec<Arc<Trace>> = specs.iter().map(build).collect();
+            let config = AnalysisConfig::default();
+            let fleet = analyze_batch(&traces, &NativeBackend, &config)
+                .map_err(|e| format!("analyze_batch failed: {e:#}"))?;
+            if fleet.reports.len() != traces.len() {
+                return Err(format!(
+                    "expected {} reports, got {}",
+                    traces.len(),
+                    fleet.reports.len()
+                ));
+            }
+            for (i, trace) in traces.iter().enumerate() {
+                let alone = analyze(trace, &NativeBackend, &config)
+                    .map_err(|e| format!("sequential analyze {i} failed: {e:#}"))?;
+                if fleet.reports[i].render() != alone.render() {
+                    return Err(format!(
+                        "trace {i}: batch report diverged from sequential\n\
+                         batch:\n{}\nsequential:\n{}",
+                        fleet.reports[i].render(),
+                        alone.render()
+                    ));
+                }
+            }
+            // Signature grouping is a partition of the fleet: every trace
+            // appears in exactly one signature group, under its own
+            // report's signature string.
+            let mut seen = vec![false; traces.len()];
+            for group in &fleet.signatures {
+                for &m in &group.members {
+                    if seen[m] {
+                        return Err(format!("trace {m} in two signature groups"));
+                    }
+                    seen[m] = true;
+                    if signature_of(&fleet.reports[m]) != group.signature {
+                        return Err(format!(
+                            "trace {m} grouped under a foreign signature"
+                        ));
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("a trace is missing from every signature group".into());
+            }
+            Ok(())
+        },
+    );
+}
