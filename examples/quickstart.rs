@@ -16,6 +16,11 @@ use autoanalyzer::simulator::engine::simulate;
 use autoanalyzer::workloads::synthetic::{synthetic, Inject};
 
 fn main() -> anyhow::Result<()> {
+    // Root causal span: everything below (pipeline stages, session
+    // matrix builds) nests under it in the flight recorder, which the
+    // CI trace-smoke step exports and validates.
+    let root = autoanalyzer::obs::trace::span("quickstart");
+
     // A 8-process, 10-region app. Region 4 gets a per-rank instruction
     // skew (static dispatch of heterogeneous work — the same disease
     // ST's ramod3 has); region 7 hammers the disk; region 9 floods the
@@ -55,5 +60,19 @@ fn main() -> anyhow::Result<()> {
         report.disparity.ccrs
     );
     println!("quickstart OK: located regions 4 (imbalance) and 7 (disk hog)");
+
+    // Close the root span, then honor the env-gated observability
+    // exports (used by the CI trace-smoke step).
+    drop(root);
+    if let Ok(path) = std::env::var("AUTOANALYZER_TRACE_OUT") {
+        let spans = autoanalyzer::obs::trace::recorder().recent(usize::MAX);
+        let doc = autoanalyzer::obs::trace::chrome_trace_json(&spans);
+        std::fs::write(&path, doc.pretty())?;
+        println!("chrome trace ({} spans) written to {path}", spans.len());
+    }
+    if let Ok(path) = std::env::var("AUTOANALYZER_OBS_OUT") {
+        std::fs::write(&path, autoanalyzer::obs::snapshot_json().pretty())?;
+        println!("obs snapshot written to {path}");
+    }
     Ok(())
 }

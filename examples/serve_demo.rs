@@ -7,7 +7,13 @@
 //! through the worker pool and reports throughput/latency plus what was
 //! found. Each worker owns its own backend instance (PJRT clients wrap
 //! raw C handles and are created on the worker thread).
+//!
+//! Telemetry is *live*, not dump-at-exit: an `ObsServer` binds an
+//! ephemeral port and the demo scrapes its own `/metrics` and `/trace`
+//! endpoints over raw TCP while results stream in.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -18,10 +24,35 @@ use autoanalyzer::simulator::engine::simulate;
 use autoanalyzer::util::stats::percentile;
 use autoanalyzer::workloads::synthetic::{synthetic, Inject};
 
+/// Minimal raw-TCP GET against the demo's own ObsServer.
+fn scrape(addr: std::net::SocketAddr, target: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(format!("GET {target} HTTP/1.1\r\nHost: demo\r\n\r\n").as_bytes())?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    Ok(response
+        .split_once("\r\n\r\n")
+        .map(|(_, body)| body.to_string())
+        .unwrap_or(response))
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let jobs: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // Live telemetry endpoint (best effort: a sandbox that forbids
+    // binding must not kill the demo).
+    let server = match autoanalyzer::obs::ObsServer::start("127.0.0.1:0") {
+        Ok(s) => {
+            println!("obs endpoint live on http://{}", s.addr());
+            Some(s)
+        }
+        Err(e) => {
+            eprintln!("obs endpoint unavailable: {e:#}");
+            None
+        }
+    };
 
     let (coord, rx) = Coordinator::start(workers, 16, || select_backend("auto", "artifacts"));
 
@@ -36,11 +67,11 @@ fn main() -> anyhow::Result<()> {
                         2 => vec![(7usize, Inject::CacheThrash)],
                         _ => vec![],
                     };
-                    AnalysisJob {
-                        id: i,
-                        trace: Arc::new(simulate(&synthetic(8, 12, &inj, i), i)),
-                        config: AnalysisConfig::default(),
-                    }
+                    AnalysisJob::new(
+                        i,
+                        Arc::new(simulate(&synthetic(8, 12, &inj, i), i)),
+                        AnalysisConfig::default(),
+                    )
                 })
                 .collect::<Vec<_>>()
         }
@@ -78,6 +109,23 @@ fn main() -> anyhow::Result<()> {
         "findings: {found_imbalance} jobs with dissimilarity bottlenecks, \
          {found_disparity} with disparity bottlenecks"
     );
+
+    // Scrape our own live endpoint before the coordinator goes away:
+    // the served /metrics must already show the coordinator counters,
+    // and /trace must return span trees from the flight recorder.
+    if let Some(s) = &server {
+        let metrics = scrape(s.addr(), "/metrics")?;
+        anyhow::ensure!(
+            metrics.contains("coordinator_jobs_completed_total"),
+            "live /metrics is missing coordinator counters"
+        );
+        let trace = scrape(s.addr(), "/trace?n=8")?;
+        anyhow::ensure!(
+            trace.contains("\"traces\""),
+            "live /trace returned no span trees"
+        );
+        println!("live self-scrape OK: /metrics and /trace answered while serving");
+    }
     coord.shutdown();
 
     // Metrics dump: everything the obs layer collected while serving —
@@ -105,6 +153,9 @@ fn main() -> anyhow::Result<()> {
 
     // A quarter of the jobs carry an injected imbalance.
     anyhow::ensure!(found_imbalance >= jobs / 4, "missed imbalances");
+    if let Some(s) = server {
+        s.shutdown();
+    }
     println!("serve_demo OK");
     Ok(())
 }

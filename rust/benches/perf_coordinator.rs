@@ -35,12 +35,8 @@ fn make_jobs(traces: &[Arc<Trace>]) -> Vec<AnalysisJob> {
     traces
         .iter()
         .enumerate()
-        .map(|(i, t)| AnalysisJob {
-            id: i as u64,
-            // Arc bump, not a sample copy — submit is O(1) in trace size.
-            trace: t.clone(),
-            config: AnalysisConfig::default(),
-        })
+        // Arc bump, not a sample copy — submit is O(1) in trace size.
+        .map(|(i, t)| AnalysisJob::new(i as u64, t.clone(), AnalysisConfig::default()))
         .collect()
 }
 

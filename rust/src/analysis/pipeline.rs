@@ -95,19 +95,28 @@ pub fn analyze_session(
     config: &AnalysisConfig,
 ) -> Result<AnalysisReport> {
     let total = crate::obs_span!("pipeline_analyze_seconds");
+    // Causal twin of the histogram span above: nests under the
+    // worker's `coordinator_job` span (or the CLI root) and parents
+    // the per-stage and session-build spans below.
+    let _causal = crate::obs::trace::span("pipeline_analyze");
     crate::obs_counter!("pipeline_runs_total").inc();
     let trace = session.trace();
     trace.validate().map_err(anyhow::Error::msg)?;
 
+    let stage = crate::obs::trace::span("pipeline_stage_dissimilarity");
     let span = crate::obs_span!("pipeline_stage_dissimilarity_seconds");
     let dissimilarity = dissimilarity_search(session, backend, config.dissimilarity_view)?;
     let dissimilarity_s = span.stop();
+    drop(stage);
     crate::obs_counter!("pipeline_reclusters_total").add(dissimilarity.reclusters as u64);
 
+    let stage = crate::obs::trace::span("pipeline_stage_disparity");
     let span = crate::obs_span!("pipeline_stage_disparity_seconds");
     let disparity = disparity_search(session, backend, config.disparity_view)?;
     let disparity_s = span.stop();
+    drop(stage);
 
+    let stage = crate::obs::trace::span("pipeline_stage_rootcause");
     let span = crate::obs_span!("pipeline_stage_rootcause_seconds");
     let dissimilarity_causes = if config.root_causes && dissimilarity.exists() {
         Some(dissimilarity_root_cause(
@@ -124,6 +133,7 @@ pub fn analyze_session(
         None
     };
     let rootcause_s = span.stop();
+    drop(stage);
     if dissimilarity.exists() || disparity.exists() {
         crate::obs_counter!("pipeline_bottlenecks_found_total").inc();
     }

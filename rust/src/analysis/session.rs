@@ -103,6 +103,7 @@ impl AnalysisSession {
         }
         self.matrix_builds.fetch_add(1, Ordering::Relaxed);
         crate::obs_counter!("session_matrix_build_total").inc();
+        let _t = crate::obs::trace::span("session_matrix_build").attr("view", view.name());
         let built = Arc::new(perf_matrix(&self.trace, view));
         let mut caches = self.caches.lock().unwrap();
         caches.matrices.entry(view).or_insert(built).clone()
@@ -120,6 +121,7 @@ impl AnalysisSession {
         }
         self.means_builds.fetch_add(1, Ordering::Relaxed);
         crate::obs_counter!("session_means_build_total").inc();
+        let _t = crate::obs::trace::span("session_means_build").attr("view", view.name());
         let built = Arc::new(region_means(&self.trace, view));
         let mut caches = self.caches.lock().unwrap();
         caches.means.entry(view).or_insert(built).clone()
@@ -143,6 +145,11 @@ impl AnalysisSession {
         }
         self.dist_builds.fetch_add(1, Ordering::Relaxed);
         crate::obs_counter!("session_dists_build_total").inc();
+        // Opened before the matrix fetch so a triggered matrix build
+        // nests under this distance-build span.
+        let _t = crate::obs::trace::span("session_dists_build")
+            .attr("view", view.name())
+            .attr("backend", backend.name());
         let x = self.matrix(view);
         let built = Arc::new(backend.pairwise_dists(&x)?);
         let mut caches = self.caches.lock().unwrap();

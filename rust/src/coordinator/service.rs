@@ -24,6 +24,7 @@ use anyhow::Result;
 
 use crate::analysis::pipeline::{analyze, AnalysisConfig};
 use crate::cluster::ClusterBackend;
+use crate::obs::trace::{span, span_child_of, SpanCtx};
 use crate::obs::Gauge;
 use crate::trace::Trace;
 
@@ -34,6 +35,23 @@ pub struct AnalysisJob {
     pub id: u64,
     pub trace: Arc<Trace>,
     pub config: AnalysisConfig,
+    /// Causal parent for the worker-side `coordinator_job` span.
+    /// [`AnalysisJob::new`] captures the submitter's current span;
+    /// `submit`/`submit_batch` stamp their own span when still `None`.
+    pub ctx: Option<SpanCtx>,
+}
+
+impl AnalysisJob {
+    /// Build a job, capturing the calling thread's current trace span
+    /// (if any) as the causal parent for worker-side spans.
+    pub fn new(id: u64, trace: Arc<Trace>, config: AnalysisConfig) -> AnalysisJob {
+        AnalysisJob {
+            id,
+            trace,
+            config,
+            ctx: crate::obs::trace::current(),
+        }
+    }
 }
 
 /// What came back.
@@ -151,9 +169,11 @@ impl Queue {
     }
 
     /// Pop a job for worker `wid`: own shard first (blocking lock),
-    /// then try-lock steals from siblings. Returns `None` only once
-    /// the queue is closed *and* drained.
-    fn pop(&self, wid: usize) -> Option<AnalysisJob> {
+    /// then try-lock steals from siblings. Returns the job plus the
+    /// shard it came from and whether the pop was a steal (`k > 0`) —
+    /// provenance the worker stamps on its causal span. `None` only
+    /// once the queue is closed *and* drained.
+    fn pop(&self, wid: usize) -> Option<(AnalysisJob, usize, bool)> {
         let n = self.shards.len();
         loop {
             for k in 0..n {
@@ -176,7 +196,7 @@ impl Queue {
                         crate::obs_counter!("coordinator_steals_total").inc();
                     }
                     shard.not_full.notify_one();
-                    return Some(job);
+                    return Some((job, sid, k > 0));
                 }
             }
             // Every shard looked empty. Park — but only after ruling
@@ -257,9 +277,20 @@ impl Coordinator {
                             }
                         };
                         crate::obs_gauge!("coordinator_workers").add(1);
-                        while let Some(job) = queue.pop(wid) {
+                        while let Some((job, shard, stolen)) = queue.pop(wid) {
                             let start = Instant::now();
                             crate::obs_gauge!("coordinator_workers_busy").add(1);
+                            // Causal span for this job's worker-side
+                            // execution: parented to the submitter's
+                            // span (shipped in `job.ctx`), tagged with
+                            // worker/shard/steal provenance. Pipeline
+                            // spans opened inside `analyze` nest under
+                            // it via the thread-local stack.
+                            let _causal = span_child_of("coordinator_job", job.ctx)
+                                .attr("job", job.id.to_string())
+                                .attr(crate::obs::selfanalyze::WORKER_ATTR, wid.to_string())
+                                .attr("shard", shard.to_string())
+                                .attr("stolen", stolen.to_string());
                             let span = crate::obs_span!("coordinator_job_seconds");
                             let outcome = match analyze(&job.trace, backend.as_ref(), &job.config)
                             {
@@ -329,8 +360,14 @@ impl Coordinator {
     }
 
     /// Enqueue a job; blocks while its shard is full.
-    pub fn submit(&self, job: AnalysisJob) {
+    pub fn submit(&self, mut job: AnalysisJob) {
         let sid = self.queue.shard_of(job.id);
+        let submit_span = span("coordinator_submit")
+            .attr("job", job.id.to_string())
+            .attr("shard", sid.to_string());
+        if job.ctx.is_none() {
+            job.ctx = Some(submit_span.ctx());
+        }
         let shard = &self.queue.shards[sid];
         let mut jobs = shard.jobs.lock().unwrap();
         while jobs.len() >= self.queue.shard_cap {
@@ -347,7 +384,7 @@ impl Coordinator {
 
     /// Enqueue a job without blocking: returns [`QueueFull`] (carrying
     /// the job back) if its shard is at capacity.
-    pub fn try_submit(&self, job: AnalysisJob) -> std::result::Result<(), QueueFull> {
+    pub fn try_submit(&self, mut job: AnalysisJob) -> std::result::Result<(), QueueFull> {
         let sid = self.queue.shard_of(job.id);
         let shard = &self.queue.shards[sid];
         let mut jobs = shard.jobs.lock().unwrap();
@@ -357,6 +394,14 @@ impl Coordinator {
                 cap: self.queue.shard_cap,
                 job,
             });
+        }
+        // Stamp the causal parent only once the job is actually
+        // accepted, so a rejected job never carries a dead span.
+        let submit_span = span("coordinator_submit")
+            .attr("job", job.id.to_string())
+            .attr("shard", sid.to_string());
+        if job.ctx.is_none() {
+            job.ctx = Some(submit_span.ctx());
         }
         jobs.push_back(job);
         self.queue.pending.fetch_add(1, Ordering::AcqRel);
@@ -374,9 +419,14 @@ impl Coordinator {
     /// as `submit`.
     pub fn submit_batch(&self, batch: Vec<AnalysisJob>) {
         crate::obs_histogram!("coordinator_submit_batch_size").observe(batch.len() as f64);
+        let batch_span =
+            span("coordinator_submit_batch").attr("jobs", batch.len().to_string());
         let n = self.queue.shards.len();
         let mut per_shard: Vec<VecDeque<AnalysisJob>> = (0..n).map(|_| VecDeque::new()).collect();
-        for job in batch {
+        for mut job in batch {
+            if job.ctx.is_none() {
+                job.ctx = Some(batch_span.ctx());
+            }
             let sid = self.queue.shard_of(job.id);
             per_shard[sid].push_back(job);
         }
@@ -443,11 +493,7 @@ mod tests {
     }
 
     fn job(id: u64, trace: &Arc<Trace>) -> AnalysisJob {
-        AnalysisJob {
-            id,
-            trace: trace.clone(),
-            config: AnalysisConfig::default(),
-        }
+        AnalysisJob::new(id, trace.clone(), AnalysisConfig::default())
     }
 
     #[test]
@@ -462,11 +508,7 @@ mod tests {
             };
             let spec = synthetic(4, 6, &inj, i);
             let trace = Arc::new(simulate(&spec, i));
-            coord.submit(AnalysisJob {
-                id: i,
-                trace,
-                config: AnalysisConfig::default(),
-            });
+            coord.submit(AnalysisJob::new(i, trace, AnalysisConfig::default()));
         }
         let mut got = Vec::new();
         for _ in 0..n {
@@ -490,11 +532,11 @@ mod tests {
         let (coord, rx) = Coordinator::start(1, 2, native_factory);
         for i in 0..6 {
             let spec = synthetic(4, 4, &[], i);
-            coord.submit(AnalysisJob {
-                id: i,
-                trace: Arc::new(simulate(&spec, i)),
-                config: AnalysisConfig::default(),
-            });
+            coord.submit(AnalysisJob::new(
+                i,
+                Arc::new(simulate(&spec, i)),
+                AnalysisConfig::default(),
+            ));
             assert!(coord.queued() <= 2);
         }
         for _ in 0..6 {
@@ -590,11 +632,11 @@ mod tests {
         let (coord, rx) = Coordinator::start(2, 4, native_factory);
         for i in 0..4 {
             let spec = synthetic(4, 4, &[], i);
-            coord.submit(AnalysisJob {
-                id: i,
-                trace: Arc::new(simulate(&spec, i)),
-                config: AnalysisConfig::default(),
-            });
+            coord.submit(AnalysisJob::new(
+                i,
+                Arc::new(simulate(&spec, i)),
+                AnalysisConfig::default(),
+            ));
         }
         for _ in 0..4 {
             rx.recv().unwrap();
@@ -693,11 +735,11 @@ mod tests {
         let mut batch = Vec::new();
         for i in 0..n {
             let spec = synthetic(4, 4, &[], i);
-            batch.push(AnalysisJob {
-                id: i,
-                trace: Arc::new(simulate(&spec, i)),
-                config: AnalysisConfig::default(),
-            });
+            batch.push(AnalysisJob::new(
+                i,
+                Arc::new(simulate(&spec, i)),
+                AnalysisConfig::default(),
+            ));
         }
         // 32 jobs > total cap 16: the batch path must block-and-resume
         // rather than overflow any shard bound.

@@ -50,6 +50,10 @@ pub fn analyze_batch(
     config: &AnalysisConfig,
 ) -> Result<FleetReport> {
     let span = crate::obs_span!("fleet_analyze_batch_seconds");
+    // Causal root for the whole batch: the pack/dispatch/slice stage
+    // spans below and every per-trace `pipeline_analyze` nest under it.
+    let _causal =
+        crate::obs::trace::span("fleet_analyze_batch").attr("traces", traces.len().to_string());
     crate::obs_histogram!("fleet_batch_size").observe(traces.len() as f64);
     crate::obs_counter!("fleet_traces_total").add(traces.len() as u64);
 
@@ -60,14 +64,20 @@ pub fn analyze_batch(
 
     if backend.supports_batched_dispatch() && sessions.len() > 1 {
         for view in distance_views(config) {
+            let pack = crate::obs::trace::span("fleet_pack").attr("view", view.name());
             let mats: Vec<Arc<Matrix>> =
                 sessions.iter().map(|s| s.matrix(view)).collect();
             let refs: Vec<&Matrix> = mats.iter().map(|m| m.as_ref()).collect();
+            drop(pack);
+            let dispatch = crate::obs::trace::span("fleet_dispatch").attr("view", view.name());
             let dists = backend.pairwise_dists_batch(&refs)?;
             crate::obs_counter!("fleet_dispatch_total").inc();
+            drop(dispatch);
+            let slice = crate::obs::trace::span("fleet_slice").attr("view", view.name());
             for (session, d) in sessions.iter().zip(dists) {
                 session.seed_distances(backend, view, Arc::new(d));
             }
+            drop(slice);
         }
     }
 

@@ -45,7 +45,23 @@
 //! native fallback (`cluster::NativeBackend`). The `obs` module is the
 //! service's self-observability layer: counters, gauges, latency
 //! histograms, span timers and leveled logging, rendered as Prometheus
-//! text or a JSON snapshot. See README.md for the repository map.
+//! text or a JSON snapshot.
+//!
+//! # Causal plane
+//!
+//! On top of the metric instruments, [`obs::trace`] records *causal*
+//! spans (`trace_id`/`span_id`/`parent_id` + named attributes) into a
+//! bounded lock-free flight recorder. Parentage follows the work, not
+//! the thread: [`coordinator::AnalysisJob`] carries the submitter's
+//! span context across the sharded queue, so worker-side job spans —
+//! and the pipeline/session spans nested under them — attribute to
+//! whoever submitted the job, through work-steals included. Exporters
+//! produce Chrome `trace_event` JSON and nested span trees.
+//! [`obs::serve::ObsServer`] is a dependency-free HTTP endpoint
+//! (`/metrics`, `/healthz`, `/snapshot`, `/trace`) serving all of it
+//! live, and [`obs::selfanalyze`] closes the loop by running the
+//! paper's own dissimilarity pipeline over the recorder's worker spans
+//! (the `selfcheck` subcommand). See README.md for the repository map.
 
 // Style choices this crate makes deliberately (hand-rolled JSON codec,
 // index-heavy numeric loops mirroring the paper's pseudocode).

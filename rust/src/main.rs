@@ -7,22 +7,31 @@
 //!   simulate       simulate a workload and save the trace
 //!   serve          coordinator service demo: stream analysis jobs
 //!   triage         fleet triage: batch-analyze many traces, group by signature
+//!   selfcheck      dogfood: run the paper pipeline over our own worker spans
 //!   list           list workloads and experiments
 //!
 //! `--backend auto|native|pjrt` selects the clustering engine; `auto`
 //! (default) uses the PJRT artifacts when `artifacts/` exists and falls
 //! back to native otherwise.
+//!
+//! Observability: `analyze` and `triage` accept `--metrics-out FILE`
+//! (JSON registry snapshot) and `--trace-out FILE` (Chrome trace JSON
+//! from the flight recorder); `serve --listen ADDR` exposes the live
+//! telemetry endpoint (`/metrics`, `/healthz`, `/snapshot`, `/trace`).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
 use autoanalyzer::cluster::backend::select_backend;
+use autoanalyzer::cluster::ClusterBackend;
 use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
 use autoanalyzer::eval::{run_experiment, EXPERIMENTS};
 use autoanalyzer::fleet::analyze_batch;
+use autoanalyzer::obs::selfanalyze::{selfanalyze, SkewBackend};
+use autoanalyzer::obs::ObsServer;
 use autoanalyzer::simulator::engine::simulate;
 use autoanalyzer::trace::{json_codec, xml_codec, Trace};
 use autoanalyzer::util::cli::Args;
@@ -41,10 +50,15 @@ USAGE:
   autoanalyzer reproduce [--experiment <id>|all] [--backend auto|native|pjrt]
   autoanalyzer analyze --workload <name> [--variant <v>] [--seed N]
                        [--backend ...] [--save-trace FILE]
+                       [--metrics-out FILE] [--trace-out FILE]
   autoanalyzer analyze-trace <FILE> [--backend ...]
   autoanalyzer simulate --workload <name> [--seed N] --out FILE [--format json|xml]
   autoanalyzer serve [--jobs N] [--workers K] [--backend ...] [--metrics]
+                     [--listen ADDR]   (live /metrics /healthz /snapshot /trace)
   autoanalyzer triage [FILE ...] [--synthetic N] [--seed N] [--backend ...] [--json]
+                      [--metrics-out FILE] [--trace-out FILE]
+  autoanalyzer selfcheck [--jobs N] [--workers K] [--slow-worker W] [--slow-ms MS]
+                         [--backend ...] [--json]
   autoanalyzer list
 
 WORKLOADS:
@@ -155,9 +169,29 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Honor `--metrics-out` (JSON registry snapshot) and `--trace-out`
+/// (Chrome trace JSON from the flight recorder). Call after the
+/// command's root span has been dropped so the exported trace is
+/// complete.
+fn write_observability_outputs(args: &Args) -> Result<()> {
+    if let Some(path) = args.str_opt("metrics-out") {
+        std::fs::write(path, autoanalyzer::obs::snapshot_json().pretty())
+            .with_context(|| format!("writing {path}"))?;
+        autoanalyzer::log_info!("metrics snapshot written to {path}");
+    }
+    if let Some(path) = args.str_opt("trace-out") {
+        let spans = autoanalyzer::obs::trace::recorder().recent(usize::MAX);
+        let doc = autoanalyzer::obs::trace::chrome_trace_json(&spans);
+        std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+        autoanalyzer::log_info!("chrome trace ({} spans) written to {path}", spans.len());
+    }
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let spec = build_workload(args)?;
     let seed = args.u64_or("seed", 2011)?;
+    let root = autoanalyzer::obs::trace::span("cli_analyze");
     let trace = Arc::new(simulate(&spec, seed));
     if let Some(path) = args.str_opt("save-trace") {
         json_codec::save(&trace, std::path::Path::new(path))?;
@@ -174,7 +208,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         "analysis took {:.1} ms",
         start.elapsed().as_secs_f64() * 1e3
     );
-    Ok(())
+    drop(root);
+    write_observability_outputs(args)
 }
 
 fn cmd_analyze_trace(args: &Args) -> Result<()> {
@@ -217,6 +252,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 4)?;
     let backend_name = args.str_or("backend", "auto").to_string();
     let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    let server = match args.str_opt("listen") {
+        Some(addr) => {
+            let s = ObsServer::start(addr)?;
+            println!("obs endpoint listening on {}", s.addr());
+            Some(s)
+        }
+        None => None,
+    };
     let (coord, rx) = Coordinator::start(workers, 16, move || {
         select_backend(&backend_name, &artifacts)
     });
@@ -234,11 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         _ => vec![],
                     };
                     let spec = synthetic(8, 12, &inj, i);
-                    AnalysisJob {
-                        id: i,
-                        trace: Arc::new(simulate(&spec, i)),
-                        config: AnalysisConfig::default(),
-                    }
+                    AnalysisJob::new(i, Arc::new(simulate(&spec, i)), AnalysisConfig::default())
                 })
                 .collect()
         })
@@ -271,6 +310,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("metrics") {
         println!("\n{}", autoanalyzer::obs::render_prometheus());
     }
+    if let Some(s) = server {
+        s.shutdown();
+    }
     Ok(())
 }
 
@@ -302,7 +344,9 @@ fn cmd_triage(args: &Args) -> Result<()> {
         autoanalyzer::log_info!("no trace files given; triaging {n} synthetic runs");
     }
     let start = Instant::now();
+    let root = autoanalyzer::obs::trace::span("cli_triage");
     let fleet = analyze_batch(&traces, backend.as_ref(), &AnalysisConfig::default())?;
+    drop(root);
     if args.flag("json") {
         println!("{}", fleet.to_json().pretty());
     } else {
@@ -314,6 +358,77 @@ fn cmd_triage(args: &Args) -> Result<()> {
         start.elapsed().as_secs_f64() * 1e3,
         backend.name()
     );
+    write_observability_outputs(args)
+}
+
+/// Dogfood per the paper: run a burst of jobs through the coordinator,
+/// then feed the recorded per-worker spans back through
+/// `analysis::analyze` (workers as processes, span names as regions).
+/// `--slow-worker W --slow-ms MS` wraps worker W's backend in
+/// [`SkewBackend`] so the self-analysis has a real fault to find.
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let jobs = args.usize_or("jobs", 24)?;
+    let workers = args.usize_or("workers", 3)?;
+    let slow = args
+        .str_opt("slow-worker")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .context("--slow-worker must be a worker index")?;
+    let slow_ms = args.u64_or("slow-ms", 25)?;
+    let backend_name = args.str_or("backend", "native").to_string();
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+
+    let fb_name = backend_name.clone();
+    let fb_artifacts = artifacts.clone();
+    let factory = move || -> Result<Box<dyn ClusterBackend>> {
+        let inner = select_backend(&fb_name, &fb_artifacts)?;
+        // Worker threads are named `autoanalyzer-worker-{wid}`.
+        let wid = std::thread::current()
+            .name()
+            .and_then(|n| n.rsplit('-').next())
+            .and_then(|t| t.parse::<usize>().ok());
+        Ok(match (wid, slow) {
+            (Some(w), Some(s)) if w == s => {
+                Box::new(SkewBackend::new(inner, Duration::from_millis(slow_ms)))
+            }
+            _ => inner,
+        })
+    };
+    let (coord, rx) = Coordinator::start(workers, 16, factory);
+    let root = autoanalyzer::obs::trace::span("selfcheck");
+    let root_ctx = root.ctx();
+    for i in 0..jobs as u64 {
+        let spec = synthetic(6, 8, &[], i);
+        coord.submit(AnalysisJob::new(
+            i,
+            Arc::new(simulate(&spec, i)),
+            AnalysisConfig::default(),
+        ));
+    }
+    for _ in 0..jobs {
+        rx.recv()?;
+    }
+    coord.shutdown();
+    drop(root);
+
+    let spans: Vec<_> = autoanalyzer::obs::trace::recorder()
+        .recent(usize::MAX)
+        .into_iter()
+        .filter(|s| s.trace_id == root_ctx.trace_id)
+        .collect();
+    let backend = select_backend(&backend_name, &artifacts)?;
+    let Some(sa) = selfanalyze(&spans, backend.as_ref())? else {
+        bail!(
+            "selfcheck needs spans from at least two workers ({} spans recorded; \
+             is AUTOANALYZER_TRACE_CAPACITY=0?)",
+            spans.len()
+        );
+    };
+    if args.flag("json") {
+        println!("{}", sa.to_json().pretty());
+    } else {
+        print!("{}", sa.render());
+    }
     Ok(())
 }
 
@@ -341,6 +456,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("triage") => cmd_triage(&args),
+        Some("selfcheck") => cmd_selfcheck(&args),
         Some("list") => {
             cmd_list();
             Ok(())

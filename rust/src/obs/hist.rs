@@ -92,7 +92,11 @@ impl Histogram {
         if total == 0 {
             return 0.0;
         }
-        let target = ((p.clamp(0.0, 100.0) / 100.0) * total as f64).ceil().max(1.0) as u64;
+        // A NaN `p` passes straight through `clamp`; treat any
+        // non-finite request as "the top of the distribution" so the
+        // sinks can never emit NaN.
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 100.0 };
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
         let mut cum = 0u64;
         for (i, &c) in counts.iter().enumerate() {
             cum += c;
@@ -171,6 +175,31 @@ mod tests {
     #[test]
     fn empty_percentile_is_zero() {
         assert_eq!(Histogram::default().percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero_for_every_p() {
+        let h = Histogram::default();
+        for p in [0.0, 50.0, 99.0, 100.0, -5.0, 250.0, f64::NAN, f64::INFINITY] {
+            let v = h.percentile(p);
+            assert!(v.is_finite(), "percentile({p}) not finite: {v}");
+            assert_eq!(v, 0.0, "percentile({p}) on empty histogram");
+        }
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.sum_seconds(), 0.0);
+    }
+
+    #[test]
+    fn non_finite_p_is_safe_on_populated_histograms() {
+        let h = Histogram::default();
+        h.observe(1e-3);
+        h.observe(1.0);
+        for p in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = h.percentile(p);
+            assert!(v.is_finite(), "percentile({p}) not finite: {v}");
+        }
+        // Non-finite p reads as the maximum, like p=100.
+        assert_eq!(h.percentile(f64::NAN), h.percentile(100.0));
     }
 
     #[test]

@@ -23,16 +23,33 @@
 //! Instrumented sites cache their handle in a `OnceLock` via the
 //! `obs_counter!` / `obs_gauge!` / `obs_histogram!` / `obs_span!`
 //! macros, so steady-state cost is an atomic add — no name lookup.
+//!
+//! On top of the flat metrics, three causal-plane modules (PR 9):
+//! - `obs::trace` — spans with `trace_id`/`span_id`/`parent_id` and
+//!   named attributes, propagated submit → shard queue → worker →
+//!   pipeline stages; completed spans land in a bounded ring-buffer
+//!   flight recorder exportable as Chrome `trace_event` JSON or nested
+//!   span trees.
+//! - `obs::serve` — a dependency-free HTTP endpoint ([`ObsServer`])
+//!   serving `/metrics`, `/healthz`, `/snapshot`, and `/trace` live.
+//! - `obs::selfanalyze` — dogfooding: per-worker span durations become
+//!   a `Trace` (workers as processes, span names as regions) and run
+//!   through the paper's own dissimilarity pipeline to flag skewed
+//!   workers (`autoanalyzer selfcheck`).
 
 pub mod hist;
 pub mod log;
 pub mod registry;
 pub mod render;
+pub mod selfanalyze;
+pub mod serve;
 pub mod span;
+pub mod trace;
 
 pub use hist::Histogram;
 pub use registry::{registry, Counter, Gauge, Registry};
 pub use render::{render_prometheus, snapshot_json};
+pub use serve::ObsServer;
 pub use span::Span;
 
 /// A process-global counter, resolved once and cached in a site-local

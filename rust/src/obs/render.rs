@@ -90,6 +90,79 @@ mod tests {
         assert!(text.contains("render_test_seconds_count"));
     }
 
+    /// Prometheus metric-name grammar: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+    fn valid_name(name: &str) -> bool {
+        let mut chars = name.chars();
+        let first_ok = chars
+            .next()
+            .map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            .unwrap_or(false);
+        first_ok && chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+
+    #[test]
+    fn exposition_format_is_well_formed() {
+        use std::collections::HashMap;
+
+        // Ensure at least one of each instrument kind is registered,
+        // including an *empty* histogram (the zero-observation edge the
+        // summary lines must survive without NaN).
+        crate::obs_counter!("expo_test_total").inc();
+        crate::obs_gauge!("expo_test_depth").set(1);
+        crate::obs_histogram!("expo_test_seconds").observe(0.02);
+        let _ = crate::obs::registry().histogram("expo_test_empty_seconds");
+
+        let text = render_prometheus();
+        let mut type_lines: HashMap<String, usize> = HashMap::new();
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split_whitespace();
+                let family = parts.next().expect("family name after # TYPE");
+                let kind = parts.next().expect("kind after family name");
+                assert!(valid_name(family), "bad family name {family:?}");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "summary"),
+                    "unknown TYPE kind {kind:?}"
+                );
+                *type_lines.entry(family.to_string()).or_insert(0) += 1;
+                continue;
+            }
+            // Sample line: `name[{labels}] value`.
+            let name = line
+                .split(|c: char| c == '{' || c == ' ')
+                .next()
+                .expect("sample line has a name");
+            assert!(valid_name(name), "bad metric name {name:?} in {line:?}");
+            let value = line
+                .rsplit(' ')
+                .next()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(f64::NAN);
+            assert!(value.is_finite(), "non-finite value in line {line:?}");
+        }
+        for (family, n) in &type_lines {
+            assert_eq!(*n, 1, "family {family} has {n} # TYPE lines");
+        }
+        for expected in [
+            "expo_test_total",
+            "expo_test_depth",
+            "expo_test_seconds",
+            "expo_test_empty_seconds",
+        ] {
+            assert!(
+                type_lines.contains_key(expected),
+                "family {expected} missing a # TYPE line"
+            );
+        }
+        // The empty histogram renders a zero count and zero quantiles,
+        // never NaN (guarded by Histogram::percentile).
+        assert!(text.contains("expo_test_empty_seconds_count 0"));
+        assert!(text.contains("expo_test_empty_seconds{quantile=\"0.99\"} 0"));
+    }
+
     #[test]
     fn json_snapshot_round_trips() {
         crate::obs_histogram!("render_json_seconds").observe(0.2);

@@ -1,0 +1,433 @@
+//! `obs::selfanalyze` — the service debugged by its own algorithm.
+//!
+//! The paper's pipeline compares *processes* of an SPMD program by the
+//! dissimilarity of their per-region performance vectors. Our worker
+//! pool is SPMD-shaped too: every worker runs the same analysis loop
+//! over jobs pulled from sharded queues. So we dogfood: per-worker span
+//! durations from the flight recorder become a [`Trace`] — workers as
+//! processes, span names as code regions — and run through
+//! [`analysis::analyze`](crate::analysis::analyze). A worker whose
+//! behavior vector falls outside the main OPTICS cluster is flagged as
+//! behavior-dissimilar, exactly how the paper flags a slow MPI rank.
+//!
+//! Cell values are the *mean* span duration per (worker, span name),
+//! not the sum: work stealing deliberately routes fewer jobs to a slow
+//! worker, so totals would mask the very skew we're after, while the
+//! per-job mean exposes it.
+//!
+//! Surfaced as `autoanalyzer selfcheck` (which injects a configurable
+//! slow worker to prove the loop closes) and available as a library
+//! call for embedding in the serve plane.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::analysis::pipeline::{analyze, AnalysisConfig};
+use crate::analysis::AnalysisReport;
+use crate::cluster::{ClusterBackend, KmeansResult};
+use crate::metrics::{Metric, MetricView};
+use crate::obs::trace::SpanRecord;
+use crate::regions::{RegionId, RegionTree};
+use crate::trace::schema::Trace;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+
+/// Span attribute naming the worker a span executed on. The
+/// coordinator stamps it on every `coordinator_job` span; child spans
+/// inherit the attribution through their parent chain.
+pub const WORKER_ATTR: &str = "worker";
+
+/// Result of running the analyzer on its own workers.
+pub struct SelfAnalysis {
+    /// The full paper-pipeline report over the worker-behavior trace.
+    pub report: AnalysisReport,
+    /// Worker labels, in process order (row order of the trace).
+    pub workers: Vec<String>,
+    /// Span names, in region order (region `r` is `regions[r-1]`).
+    pub regions: Vec<String>,
+    /// Per-worker mean total seconds (sum of the per-region means, in
+    /// `workers` order) — the tie-breaker for [`SelfAnalysis::outliers`].
+    pub totals: Vec<f64>,
+}
+
+impl SelfAnalysis {
+    /// Did the dissimilarity stage split the workers into more than one
+    /// behavior cluster?
+    pub fn skewed(&self) -> bool {
+        self.report.dissimilarity.exists()
+    }
+
+    /// Process indices outside the "pack", sorted. The pack is the
+    /// largest behavior cluster; a size tie breaks toward the cluster
+    /// with the smallest mean total duration. The tie-break matters on
+    /// real (noisy) timings: if jitter splits every worker into its own
+    /// singleton cluster, "smaller than the largest" would report
+    /// nothing, hiding the genuinely slow worker behind the tie.
+    pub fn outliers(&self) -> Vec<usize> {
+        let clusters = self.report.dissimilarity.clustering.clusters();
+        if clusters.len() <= 1 {
+            return Vec::new();
+        }
+        let mean_total = |c: &[usize]| -> f64 {
+            c.iter().map(|&p| self.totals[p]).sum::<f64>() / c.len() as f64
+        };
+        let mut pack = 0;
+        for i in 1..clusters.len() {
+            let (a, b) = (&clusters[i], &clusters[pack]);
+            if a.len() > b.len() || (a.len() == b.len() && mean_total(a) < mean_total(b)) {
+                pack = i;
+            }
+        }
+        let mut out: Vec<usize> = clusters
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != pack)
+            .flat_map(|(_, c)| c.iter().copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Labels of the outlier workers.
+    pub fn outlier_workers(&self) -> Vec<&str> {
+        self.outliers()
+            .into_iter()
+            .map(|p| self.workers[p].as_str())
+            .collect()
+    }
+
+    /// Machine-readable verdict.
+    pub fn to_json(&self) -> Json {
+        let clusters = Json::Arr(
+            self.report
+                .dissimilarity
+                .clustering
+                .clusters()
+                .iter()
+                .map(|c| Json::Arr(c.iter().map(|&p| Json::Num(p as f64)).collect()))
+                .collect(),
+        );
+        let strs = |xs: &[String]| {
+            Json::from_strs(&xs.iter().map(String::as_str).collect::<Vec<_>>())
+        };
+        Json::obj()
+            .push("workers", strs(&self.workers))
+            .push("regions", strs(&self.regions))
+            .push(
+                "worker_mean_total_s",
+                Json::Arr(self.totals.iter().map(|&t| Json::Num(t)).collect()),
+            )
+            .push("skewed", Json::Bool(self.skewed()))
+            .push("clusters", clusters)
+            .push(
+                "outliers",
+                Json::Arr(
+                    self.outliers()
+                        .into_iter()
+                        .map(|p| Json::Num(p as f64))
+                        .collect(),
+                ),
+            )
+            .push("outlier_workers", Json::from_strs(&self.outlier_workers()))
+    }
+
+    /// Human-readable verdict.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("selfcheck: worker-behavior dissimilarity (paper pipeline over own spans)\n");
+        out.push_str(&format!(
+            "  workers: {}  regions: {}\n",
+            self.workers.len(),
+            self.regions.len()
+        ));
+        out.push_str(&self.report.dissimilarity.clustering.render());
+        if self.skewed() {
+            let outliers = self.outlier_workers().join(", ");
+            out.push_str(&format!(
+                "  verdict: SKEWED — worker(s) [{outliers}] behave dissimilarly from the pack\n"
+            ));
+        } else {
+            out.push_str("  verdict: uniform — all workers behave alike\n");
+        }
+        out
+    }
+}
+
+/// Which worker a span executed on: its own `worker` attribute, or the
+/// nearest ancestor's (within `by_id`).
+fn worker_of<'a>(
+    span: &'a SpanRecord,
+    by_id: &'a BTreeMap<u64, &'a SpanRecord>,
+) -> Option<&'a str> {
+    let mut cur = Some(span);
+    while let Some(s) = cur {
+        if let Some(w) = s.attr(WORKER_ATTR) {
+            return Some(w);
+        }
+        cur = by_id.get(&s.parent_id).copied();
+    }
+    None
+}
+
+/// Build a worker-behavior [`Trace`] from recorded spans: one process
+/// per worker label, one region per span name, each cell the mean
+/// duration (seconds) of that span name on that worker. Returns `None`
+/// when fewer than two workers contributed spans (nothing to compare).
+pub fn worker_trace(spans: &[SpanRecord]) -> Option<(Trace, Vec<String>, Vec<String>)> {
+    let by_id: BTreeMap<u64, &SpanRecord> = spans.iter().map(|s| (s.span_id, s)).collect();
+
+    // (worker label, span name) -> (sum seconds, count).
+    let mut cells: BTreeMap<(String, &'static str), (f64, u64)> = BTreeMap::new();
+    for s in spans {
+        if let Some(w) = worker_of(s, &by_id) {
+            let cell = cells.entry((w.to_string(), s.name)).or_insert((0.0, 0));
+            cell.0 += s.dur_us as f64 / 1e6;
+            cell.1 += 1;
+        }
+    }
+
+    let mut workers: Vec<String> = cells.keys().map(|(w, _)| w.clone()).collect();
+    // Numeric labels sort numerically so worker "10" follows "9".
+    workers.sort_by_key(|w| (w.parse::<u64>().ok(), w.clone()));
+    workers.dedup();
+    let mut names: Vec<&'static str> = cells.keys().map(|(_, n)| *n).collect();
+    names.sort_unstable();
+    names.dedup();
+    if workers.len() < 2 || names.is_empty() {
+        return None;
+    }
+
+    let mut tree = RegionTree::new("autoanalyzer-workers");
+    for name in &names {
+        tree.add(RegionId(0), name);
+    }
+    let mut trace = Trace::new(tree, workers.len());
+    for (p, w) in workers.iter().enumerate() {
+        let mut total = 0.0;
+        for (r, name) in names.iter().enumerate() {
+            let mean = cells
+                .get(&(w.clone(), *name))
+                .map(|(sum, n)| sum / *n as f64)
+                .unwrap_or(0.0);
+            let mut cell = trace.sample_mut(p, RegionId(r + 1));
+            cell.cpu = mean;
+            cell.wall = mean;
+            drop(cell);
+            total += mean;
+        }
+        let mut root = trace.sample_mut(p, RegionId(0));
+        root.wall = total.max(1e-9);
+        root.cpu = total;
+    }
+    trace.set_meta("source", "obs::selfanalyze worker spans");
+    let regions = names.iter().map(|n| n.to_string()).collect();
+    Some((trace, workers, regions))
+}
+
+/// Run the paper's own pipeline over the service's recorded spans.
+/// `Ok(None)` when the spans name fewer than two workers.
+pub fn selfanalyze(
+    spans: &[SpanRecord],
+    backend: &dyn ClusterBackend,
+) -> Result<Option<SelfAnalysis>> {
+    let Some((trace, workers, regions)) = worker_trace(spans) else {
+        return Ok(None);
+    };
+    // Per-worker mean total seconds (root row of the behavior trace),
+    // kept for the outlier tie-break and the JSON verdict.
+    let totals: Vec<f64> = (0..workers.len())
+        .map(|p| trace.sample(p, RegionId(0)).cpu)
+        .collect();
+    crate::obs_counter!("selfanalyze_runs_total").inc();
+    // CPU clock for dissimilarity per the paper; plain wall (not CRNM)
+    // for disparity — span data has no hardware counters, so CRNM
+    // would be identically zero. Root causes need the full five-metric
+    // attribute table, which spans cannot supply.
+    let config = AnalysisConfig {
+        dissimilarity_view: MetricView::Plain(Metric::CpuClock),
+        disparity_view: MetricView::Plain(Metric::WallClock),
+        root_causes: false,
+    };
+    let report = analyze(&Arc::new(trace), backend, &config)?;
+    Ok(Some(SelfAnalysis {
+        report,
+        workers,
+        regions,
+        totals,
+    }))
+}
+
+/// A [`ClusterBackend`] wrapper that sleeps before every dispatch —
+/// the injected fault for `selfcheck`: wrap one worker's backend in
+/// `SkewBackend` and the self-analysis must flag that worker as
+/// behavior-dissimilar.
+pub struct SkewBackend {
+    inner: Box<dyn ClusterBackend>,
+    delay: Duration,
+}
+
+impl SkewBackend {
+    pub fn new(inner: Box<dyn ClusterBackend>, delay: Duration) -> SkewBackend {
+        SkewBackend { inner, delay }
+    }
+}
+
+impl ClusterBackend for SkewBackend {
+    fn pairwise_dists(&self, x: &Matrix) -> Result<Matrix> {
+        std::thread::sleep(self.delay);
+        self.inner.pairwise_dists(x)
+    }
+
+    fn severity_kmeans(&self, points: &[f32]) -> Result<KmeansResult> {
+        std::thread::sleep(self.delay);
+        self.inner.severity_kmeans(points)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+
+    /// A synthetic worker-side span set: `coordinator_job` roots carry
+    /// the worker attr; nested pipeline spans inherit it via parents.
+    fn job_span(
+        span_id: u64,
+        worker: &str,
+        name: &'static str,
+        parent_id: u64,
+        dur_us: u64,
+    ) -> SpanRecord {
+        let attrs = if parent_id == 0 {
+            vec![(WORKER_ATTR, worker.to_string())]
+        } else {
+            Vec::new()
+        };
+        SpanRecord {
+            trace_id: 1,
+            span_id,
+            parent_id,
+            name,
+            start_us: span_id,
+            dur_us,
+            attrs,
+        }
+    }
+
+    /// `jobs` jobs per worker; worker labels "0".."w-1"; `scale[w]`
+    /// multiplies that worker's durations.
+    fn fleet_spans(workers: usize, jobs: usize, scale: &[f64]) -> Vec<SpanRecord> {
+        let mut spans = Vec::new();
+        let mut id = 1;
+        for w in 0..workers {
+            let label: String = w.to_string();
+            for _ in 0..jobs {
+                let k = scale[w];
+                let job_id = id;
+                spans.push(job_span(
+                    job_id,
+                    &label,
+                    "coordinator_job",
+                    0,
+                    (1000.0 * k) as u64,
+                ));
+                spans.push(job_span(id + 1, "", "pipeline_analyze", job_id, (800.0 * k) as u64));
+                spans.push(job_span(
+                    id + 2,
+                    "",
+                    "pipeline_stage_dissimilarity",
+                    id + 1,
+                    (500.0 * k) as u64,
+                ));
+                id += 3;
+            }
+        }
+        spans
+    }
+
+    #[test]
+    fn slow_worker_is_flagged_as_dissimilar() {
+        let spans = fleet_spans(3, 4, &[1.0, 1.0, 100.0]);
+        let sa = selfanalyze(&spans, &NativeBackend)
+            .unwrap()
+            .expect("two+ workers");
+        assert_eq!(sa.workers, vec!["0", "1", "2"]);
+        assert!(sa.skewed(), "100x slower worker must split the clustering");
+        assert_eq!(sa.outliers(), vec![2]);
+        assert_eq!(sa.outlier_workers(), vec!["2"]);
+        let doc = Json::parse(&sa.to_json().pretty()).unwrap();
+        assert_eq!(doc.get("skewed").and_then(Json::as_bool), Some(true));
+        assert!(sa.render().contains("SKEWED"));
+    }
+
+    #[test]
+    fn uniform_workers_are_not_flagged() {
+        let spans = fleet_spans(3, 4, &[1.0, 1.0, 1.0]);
+        let sa = selfanalyze(&spans, &NativeBackend)
+            .unwrap()
+            .expect("two+ workers");
+        assert!(!sa.skewed(), "identical vectors form one cluster");
+        assert!(sa.outliers().is_empty());
+        assert!(sa.render().contains("uniform"));
+    }
+
+    #[test]
+    fn attribution_walks_the_parent_chain() {
+        let spans = fleet_spans(2, 1, &[1.0, 1.0]);
+        let (trace, workers, regions) = worker_trace(&spans).expect("trace");
+        assert_eq!(workers, vec!["0", "1"]);
+        // All three span names became regions, including the nested
+        // ones that carry no worker attr of their own.
+        assert_eq!(
+            regions,
+            vec![
+                "coordinator_job".to_string(),
+                "pipeline_analyze".to_string(),
+                "pipeline_stage_dissimilarity".to_string(),
+            ]
+        );
+        assert_eq!(trace.nprocs(), 2);
+        // Mean duration of pipeline_analyze (region index 2) is 800us.
+        let r = regions
+            .iter()
+            .position(|n| n == "pipeline_analyze")
+            .unwrap();
+        let got = trace.sample(0, RegionId(r + 1)).cpu;
+        assert!((got - 800e-6).abs() < 1e-9, "mean {got} != 800us");
+    }
+
+    #[test]
+    fn fewer_than_two_workers_yields_none() {
+        let spans = fleet_spans(1, 3, &[1.0]);
+        assert!(worker_trace(&spans).is_none());
+        assert!(selfanalyze(&spans, &NativeBackend).unwrap().is_none());
+        assert!(worker_trace(&[]).is_none());
+    }
+
+    #[test]
+    fn mean_not_sum_defeats_work_stealing_masking() {
+        // Worker 1 is 50x slower per job but ran a third of the jobs
+        // (work stealing drained its queue): sums would be comparable,
+        // means are not.
+        let mut spans = fleet_spans(1, 9, &[1.0]);
+        let mut extra = Vec::new();
+        let mut id = 1000;
+        for _ in 0..3 {
+            extra.push(job_span(id, "1", "coordinator_job", 0, 50_000));
+            id += 1;
+        }
+        spans.extend(extra);
+        let sa = selfanalyze(&spans, &NativeBackend)
+            .unwrap()
+            .expect("two workers");
+        assert!(sa.skewed());
+        assert_eq!(sa.outlier_workers(), vec!["1"]);
+    }
+}

@@ -1,0 +1,266 @@
+//! `obs::serve` — a live, dependency-free telemetry endpoint.
+//!
+//! Before this module the registry was dump-at-exit only (serve_demo
+//! printed the Prometheus text when it finished). [`ObsServer`] binds a
+//! plain `std::net::TcpListener` and answers HTTP/1.1 GETs while the
+//! coordinator is running:
+//!
+//! - `GET /healthz`  — liveness, `200 ok`
+//! - `GET /metrics`  — Prometheus text exposition ([`render_prometheus`])
+//! - `GET /snapshot` — JSON registry snapshot ([`snapshot_json`])
+//! - `GET /trace?n=K[&format=chrome]` — last K spans from the flight
+//!   recorder, as nested span trees (default) or Chrome `trace_event`
+//!   JSON (`format=chrome`, loadable in Perfetto)
+//!
+//! One accept-loop thread, one connection at a time, `Connection:
+//! close` on every response: deliberately minimal, because the crate's
+//! only dependency is `anyhow` and a telemetry scrape path must never
+//! compete with the analysis plane for resources. This is also the
+//! first brick of the ROADMAP's multi-process front door — the listener
+//! that later grows an ingest route.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::obs::render::{render_prometheus, snapshot_json};
+use crate::obs::trace::{chrome_trace_json, recorder, span_trees_json};
+use crate::{log_info, log_warn, obs_counter, obs_span};
+
+/// Largest request head (request line + headers) we will read.
+const MAX_REQUEST_BYTES: usize = 16 * 1024;
+
+/// Default span count for `GET /trace` when `n` is absent.
+const DEFAULT_TRACE_SPANS: usize = 256;
+
+/// A running telemetry endpoint. Dropping (or calling
+/// [`ObsServer::shutdown`]) stops the accept loop and joins its thread.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9100"`; port 0 picks a free port)
+    /// and start serving on a background thread.
+    pub fn start(addr: &str) -> Result<ObsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("obs server bind {addr}"))?;
+        let local = listener.local_addr().context("obs server local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("autoanalyzer-obs-http".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            if let Err(err) = handle_conn(stream) {
+                                log_warn!("obs serve conn error: {err:#}");
+                            }
+                        }
+                        Err(err) => log_warn!("obs serve accept error: {err}"),
+                    }
+                }
+            })
+            .context("obs server thread spawn")?;
+        log_info!("obs endpoint listening on {local}");
+        Ok(ObsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the server thread.
+    pub fn shutdown(self) {
+        // Drop does the work; this method just names the intent.
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept loop with a throwaway connection to
+        // ourselves; if that fails the listener is already dead.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream) -> Result<()> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .context("set read timeout")?;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    // Read until the end of the request head; everything we serve is
+    // GET, so any body is ignored.
+    loop {
+        let n = stream.read(&mut chunk).context("read request")?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= MAX_REQUEST_BYTES {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut request_line = head.lines().next().unwrap_or("").split_whitespace();
+    let method = request_line.next().unwrap_or("");
+    let target = request_line.next().unwrap_or("/");
+
+    obs_counter!("serve_requests_total").inc();
+    let _span = obs_span!("serve_request_seconds");
+    let causal = crate::obs::trace::span("serve_request").attr("target", target.to_string());
+    let (status, content_type, body) = route(method, target);
+    drop(causal);
+
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(response.as_bytes()).context("write head")?;
+    stream.write_all(body.as_bytes()).context("write body")?;
+    Ok(())
+}
+
+fn route(method: &str, target: &str) -> (&'static str, &'static str, String) {
+    const TEXT: &str = "text/plain; charset=utf-8";
+    const PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+    const JSON: &str = "application/json";
+
+    if method != "GET" {
+        return ("405 Method Not Allowed", TEXT, "method not allowed\n".into());
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/healthz" => ("200 OK", TEXT, "ok\n".into()),
+        "/metrics" => ("200 OK", PROM, render_prometheus()),
+        "/snapshot" => ("200 OK", JSON, snapshot_json().pretty()),
+        "/trace" => {
+            let n = query_param(query, "n")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(DEFAULT_TRACE_SPANS);
+            let spans = recorder().recent(n);
+            let doc = if query_param(query, "format") == Some("chrome") {
+                chrome_trace_json(&spans)
+            } else {
+                span_trees_json(&spans)
+            };
+            ("200 OK", JSON, doc.pretty())
+        }
+        _ => {
+            obs_counter!("serve_unknown_route_total").inc();
+            ("404 Not Found", TEXT, format!("no route for {path}\n"))
+        }
+    }
+}
+
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|pair| pair.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal raw-socket GET: returns (status line, body).
+    fn get(addr: SocketAddr, target: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {target} HTTP/1.1\r\nHost: test\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        let status = response.lines().next().unwrap_or("").to_string();
+        let body = response
+            .split_once("\r\n\r\n")
+            .map(|(_, b)| b.to_string())
+            .unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_all_routes() {
+        crate::obs_counter!("serve_test_probe_total").inc();
+        let server = ObsServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert_eq!(body, "ok\n");
+
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert!(body.contains("serve_test_probe_total"));
+
+        let (status, body) = get(addr, "/snapshot");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        let snap = crate::util::json::Json::parse(&body).unwrap();
+        assert!(snap.get("counters").is_some());
+
+        {
+            let _s = crate::obs::trace::span("serve_test_span");
+        }
+        let (status, body) = get(addr, "/trace?n=16");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        let doc = crate::util::json::Json::parse(&body).unwrap();
+        assert!(doc.get("traces").and_then(|t| t.as_arr()).is_some());
+
+        let (status, body) = get(addr, "/trace?n=16&format=chrome");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        let doc = crate::util::json::Json::parse(&body).unwrap();
+        assert!(doc.get("traceEvents").and_then(|t| t.as_arr()).is_some());
+
+        let (status, _) = get(addr, "/definitely-not-a-route");
+        assert_eq!(status, "HTTP/1.1 404 Not Found");
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_non_get_methods() {
+        let server = ObsServer::start("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(b"POST /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+            .unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 405"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn query_param_parses_pairs() {
+        assert_eq!(query_param("n=5&format=chrome", "n"), Some("5"));
+        assert_eq!(query_param("n=5&format=chrome", "format"), Some("chrome"));
+        assert_eq!(query_param("n=5", "format"), None);
+        assert_eq!(query_param("", "n"), None);
+    }
+}

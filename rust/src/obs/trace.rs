@@ -1,0 +1,514 @@
+//! `obs::trace` — the causal tracing plane.
+//!
+//! The PR 6 `obs` layer answers *how much* (counters, histograms); this
+//! module answers *where and why*: every span carries a `trace_id` /
+//! `span_id` / `parent_id` triple plus named attributes, so one job's
+//! path — submit → shard queue → (possibly stolen) worker pop →
+//! pipeline stages → session matrix/distance builds — is reconstructible
+//! as a tree after the fact.
+//!
+//! Propagation model:
+//! - Within a thread, spans nest through a thread-local stack:
+//!   [`span`] parents to the innermost open span and starts a new root
+//!   trace when none is open.
+//! - Across threads, context travels *explicitly*: capture
+//!   [`TraceSpan::ctx`] (or [`current`]) on the producing thread, ship
+//!   the [`SpanCtx`] with the work item, and open the remote side with
+//!   [`span_child_of`]. `coordinator::AnalysisJob` carries exactly this.
+//!
+//! Completed spans land in the global [`FlightRecorder`]: a bounded
+//! ring buffer (overwrite-oldest, capacity from
+//! `AUTOANALYZER_TRACE_CAPACITY`, default [`DEFAULT_CAPACITY`]; 0
+//! disables recording). Writers claim a slot with one wait-free
+//! `fetch_add`; only the claimed slot is locked, so recording never
+//! serializes concurrent workers on a shared lock. Two exporters:
+//! [`chrome_trace_json`] (Chrome `trace_event` format, loadable in
+//! Perfetto / `chrome://tracing`) and [`span_trees_json`] (nested
+//! span-tree JSON, served by `obs::serve` at `GET /trace`).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default flight-recorder capacity, in spans. Override with the
+/// `AUTOANALYZER_TRACE_CAPACITY` environment variable (0 disables).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// A point in the causal tree — everything a remote thread needs to
+/// parent its spans under ours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+/// One completed span, as stored in the flight recorder.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// Parent span id; 0 for a trace root.
+    pub parent_id: u64,
+    pub name: &'static str,
+    /// Start offset from the process trace epoch, in microseconds.
+    pub start_us: u64,
+    /// Duration in microseconds (recorded as at least 1, so exported
+    /// "complete" events are never zero-width).
+    pub dur_us: u64,
+    /// Named attributes (`worker`, `shard`, `view`, ...).
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl SpanRecord {
+    /// Look up one attribute by key.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// End offset from the trace epoch, in microseconds.
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+}
+
+fn next_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The process trace epoch: all `start_us` offsets are measured from
+/// here, so spans from different threads share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    /// Innermost-last stack of open spans on this thread.
+    static STACK: RefCell<Vec<SpanCtx>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The innermost span open on this thread, if any — the implicit
+/// parent for [`span`] and the context jobs capture at construction.
+pub fn current() -> Option<SpanCtx> {
+    STACK.with(|s| s.borrow().last().copied())
+}
+
+/// Open a span parented to this thread's current span; a new root
+/// trace when none is open.
+pub fn span(name: &'static str) -> TraceSpan {
+    TraceSpan::open(name, current())
+}
+
+/// Open a span with an explicit parent — the cross-thread entry point
+/// (worker-side execution of a job submitted elsewhere). `None` starts
+/// a new root trace.
+pub fn span_child_of(name: &'static str, parent: Option<SpanCtx>) -> TraceSpan {
+    TraceSpan::open(name, parent)
+}
+
+/// RAII guard for an open causal span. While alive it is this thread's
+/// [`current`] context (child spans and jobs constructed in scope
+/// parent to it); on drop the completed [`SpanRecord`] lands in the
+/// global flight recorder.
+#[derive(Debug)]
+pub struct TraceSpan {
+    rec: SpanRecord,
+    start: Instant,
+}
+
+impl TraceSpan {
+    fn open(name: &'static str, parent: Option<SpanCtx>) -> TraceSpan {
+        let span_id = next_id();
+        let (trace_id, parent_id) = match parent {
+            Some(ctx) => (ctx.trace_id, ctx.span_id),
+            None => (span_id, 0),
+        };
+        let start_us = epoch().elapsed().as_micros() as u64;
+        STACK.with(|s| s.borrow_mut().push(SpanCtx { trace_id, span_id }));
+        TraceSpan {
+            rec: SpanRecord {
+                trace_id,
+                span_id,
+                parent_id,
+                name,
+                start_us,
+                dur_us: 0,
+                attrs: Vec::new(),
+            },
+            start: Instant::now(),
+        }
+    }
+
+    /// This span's context, for parenting spans on other threads.
+    pub fn ctx(&self) -> SpanCtx {
+        SpanCtx {
+            trace_id: self.rec.trace_id,
+            span_id: self.rec.span_id,
+        }
+    }
+
+    /// Attach a named attribute (builder style, chainable).
+    pub fn attr(mut self, key: &'static str, value: impl Into<String>) -> TraceSpan {
+        self.rec.attrs.push((key, value.into()));
+        self
+    }
+}
+
+impl Drop for TraceSpan {
+    fn drop(&mut self) {
+        self.rec.dur_us = (self.start.elapsed().as_micros() as u64).max(1);
+        // Remove *this* span from the stack (usually the top, but a
+        // guard moved across scopes may drop out of order — search by
+        // id rather than assuming strict nesting).
+        STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            if let Some(pos) = stack.iter().rposition(|c| c.span_id == self.rec.span_id) {
+                stack.remove(pos);
+            }
+        });
+        crate::obs_counter!("trace_spans_recorded_total").inc();
+        recorder().record(self.rec.clone());
+    }
+}
+
+/// Bounded overwrite-oldest ring buffer of completed spans.
+///
+/// Writers claim a slot with one wait-free `fetch_add` on the cursor;
+/// the claimed slot's own mutex is then taken for the store, so two
+/// writers contend only when the ring laps itself onto the same slot
+/// (or a reader is copying that slot out). No global write lock, no
+/// allocation beyond the record itself.
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    cursor: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// A recorder holding at most `cap` spans (0 = recording disabled).
+    pub fn with_capacity(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded, including overwritten ones.
+    pub fn total_recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    /// Spans lost to overwrite-oldest so far.
+    pub fn dropped(&self) -> u64 {
+        self.total_recorded()
+            .saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Store one completed span (overwriting the oldest when full).
+    pub fn record(&self, rec: SpanRecord) {
+        let cap = self.slots.len();
+        if cap == 0 {
+            return;
+        }
+        let slot = self.cursor.fetch_add(1, Ordering::AcqRel) as usize % cap;
+        *self.slots[slot].lock().unwrap() = Some(rec);
+    }
+
+    /// The last `n` completed spans, in completion order (oldest
+    /// first). Reads are not synchronized against writers: the snapshot
+    /// is exact once quiesced and approximate under load — which is
+    /// what a live telemetry endpoint wants.
+    pub fn recent(&self, n: usize) -> Vec<SpanRecord> {
+        let cap = self.slots.len();
+        if cap == 0 || n == 0 {
+            return Vec::new();
+        }
+        let cursor = self.cursor.load(Ordering::Acquire);
+        let start = cursor.saturating_sub(cap as u64);
+        let mut out = Vec::new();
+        for i in start..cursor {
+            if let Some(rec) = self.slots[i as usize % cap].lock().unwrap().as_ref() {
+                out.push(rec.clone());
+            }
+        }
+        if out.len() > n {
+            out.drain(..out.len() - n);
+        }
+        out
+    }
+
+    /// Empty every slot. The cursor keeps counting, so
+    /// [`FlightRecorder::total_recorded`] stays monotonic.
+    pub fn clear(&self) {
+        for slot in &self.slots {
+            *slot.lock().unwrap() = None;
+        }
+    }
+}
+
+/// The process-global flight recorder. Capacity is read from
+/// `AUTOANALYZER_TRACE_CAPACITY` once, at first use.
+pub fn recorder() -> &'static FlightRecorder {
+    static REC: OnceLock<FlightRecorder> = OnceLock::new();
+    REC.get_or_init(|| {
+        let cap = std::env::var("AUTOANALYZER_TRACE_CAPACITY")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        FlightRecorder::with_capacity(cap)
+    })
+}
+
+/// Export spans in Chrome `trace_event` format (one complete `"X"`
+/// event per span, timestamps in µs) — loadable in Perfetto or
+/// `chrome://tracing`. Each causal tree gets its own track (`tid` =
+/// trace id); the span/parent ids ride along in `args`.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let mut args = Json::obj()
+            .push("trace_id", Json::Num(s.trace_id as f64))
+            .push("span_id", Json::Num(s.span_id as f64))
+            .push("parent_id", Json::Num(s.parent_id as f64));
+        for (k, v) in &s.attrs {
+            args = args.push(k, Json::Str(v.clone()));
+        }
+        events.push(
+            Json::obj()
+                .push("name", Json::Str(s.name.to_string()))
+                .push("cat", Json::Str("autoanalyzer".to_string()))
+                .push("ph", Json::Str("X".to_string()))
+                .push("ts", Json::Num(s.start_us as f64))
+                .push("dur", Json::Num(s.dur_us as f64))
+                .push("pid", Json::Num(1.0))
+                .push("tid", Json::Num(s.trace_id as f64))
+                .push("args", args),
+        );
+    }
+    Json::obj()
+        .push("displayTimeUnit", Json::Str("ms".to_string()))
+        .push("traceEvents", Json::Arr(events))
+}
+
+/// Export spans as nested span trees grouped by trace id. A span whose
+/// parent was evicted from the ring (or belongs to no recorded span)
+/// becomes a root of its trace — the tree degrades gracefully instead
+/// of dropping orphans.
+pub fn span_trees_json(spans: &[SpanRecord]) -> Json {
+    use std::collections::{BTreeMap, HashSet};
+
+    let present: HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut children: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    let mut roots: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    for s in spans {
+        if s.parent_id != 0 && present.contains(&s.parent_id) {
+            children.entry(s.parent_id).or_default().push(s);
+        } else {
+            roots.entry(s.trace_id).or_default().push(s);
+        }
+    }
+
+    fn node(s: &SpanRecord, children: &BTreeMap<u64, Vec<&SpanRecord>>) -> Json {
+        let mut attrs = Json::obj();
+        for (k, v) in &s.attrs {
+            attrs = attrs.push(k, Json::Str(v.clone()));
+        }
+        let kids: Vec<Json> = children
+            .get(&s.span_id)
+            .map(|c| c.iter().map(|k| node(k, children)).collect())
+            .unwrap_or_default();
+        Json::obj()
+            .push("name", Json::Str(s.name.to_string()))
+            .push("span_id", Json::Num(s.span_id as f64))
+            .push("parent_id", Json::Num(s.parent_id as f64))
+            .push("start_us", Json::Num(s.start_us as f64))
+            .push("dur_us", Json::Num(s.dur_us as f64))
+            .push("attrs", attrs)
+            .push("children", Json::Arr(kids))
+    }
+
+    let traces: Vec<Json> = roots
+        .iter()
+        .map(|(tid, rs)| {
+            Json::obj()
+                .push("trace_id", Json::Num(*tid as f64))
+                .push(
+                    "roots",
+                    Json::Arr(rs.iter().map(|r| node(r, &children)).collect()),
+                )
+        })
+        .collect();
+    Json::obj()
+        .push("spans", Json::Num(spans.len() as f64))
+        .push("traces", Json::Arr(traces))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, span_id: u64, parent_id: u64, name: &'static str) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            span_id,
+            parent_id,
+            name,
+            start_us: span_id * 10,
+            dur_us: 5,
+            attrs: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let fr = FlightRecorder::with_capacity(4);
+        for i in 1..=10 {
+            fr.record(rec(1, i, 0, "s"));
+        }
+        assert_eq!(fr.capacity(), 4);
+        assert_eq!(fr.total_recorded(), 10);
+        assert_eq!(fr.dropped(), 6);
+        let got = fr.recent(100);
+        let ids: Vec<u64> = got.iter().map(|r| r.span_id).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10], "oldest-first tail of the ring");
+        // `n` trims from the old end.
+        let last2: Vec<u64> = fr.recent(2).iter().map(|r| r.span_id).collect();
+        assert_eq!(last2, vec![9, 10]);
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let fr = FlightRecorder::with_capacity(0);
+        fr.record(rec(1, 1, 0, "s"));
+        assert!(fr.recent(10).is_empty());
+        assert_eq!(fr.total_recorded(), 0);
+    }
+
+    #[test]
+    fn clear_empties_slots_but_keeps_totals() {
+        let fr = FlightRecorder::with_capacity(4);
+        fr.record(rec(1, 1, 0, "s"));
+        fr.clear();
+        assert!(fr.recent(10).is_empty());
+        assert_eq!(fr.total_recorded(), 1);
+    }
+
+    #[test]
+    fn spans_nest_within_a_thread() {
+        let outer = span("trace_test_outer");
+        let outer_ctx = outer.ctx();
+        let (inner_ctx, inner_parent) = {
+            let inner = span("trace_test_inner");
+            assert_eq!(current(), Some(inner.ctx()));
+            (inner.ctx(), inner.rec.parent_id)
+        };
+        assert_eq!(inner_parent, outer_ctx.span_id);
+        assert_eq!(inner_ctx.trace_id, outer_ctx.trace_id);
+        assert_eq!(current(), Some(outer_ctx));
+        drop(outer);
+        // Both completed spans are in the global recorder.
+        let spans = recorder().recent(usize::MAX);
+        let inner_rec = spans
+            .iter()
+            .find(|s| s.span_id == inner_ctx.span_id)
+            .expect("inner recorded");
+        assert_eq!(inner_rec.parent_id, outer_ctx.span_id);
+        assert_eq!(inner_rec.name, "trace_test_inner");
+        assert!(inner_rec.dur_us >= 1);
+        assert!(spans.iter().any(|s| s.span_id == outer_ctx.span_id));
+    }
+
+    #[test]
+    fn explicit_parent_crosses_threads() {
+        let parent = span("trace_test_xthread_parent");
+        let ctx = parent.ctx();
+        let child_ctx = std::thread::spawn(move || {
+            assert_eq!(current(), None, "fresh thread has no implicit parent");
+            let child = span_child_of("trace_test_xthread_child", Some(ctx));
+            child.ctx()
+        })
+        .join()
+        .unwrap();
+        drop(parent);
+        let spans = recorder().recent(usize::MAX);
+        let child = spans
+            .iter()
+            .find(|s| s.span_id == child_ctx.span_id)
+            .expect("child recorded");
+        assert_eq!(child.parent_id, ctx.span_id);
+        assert_eq!(child.trace_id, ctx.trace_id);
+    }
+
+    #[test]
+    fn attrs_attach_and_look_up() {
+        let ctx = {
+            let s = span("trace_test_attrs")
+                .attr("worker", "3")
+                .attr("stolen", "true");
+            s.ctx()
+        };
+        let spans = recorder().recent(usize::MAX);
+        let s = spans.iter().find(|s| s.span_id == ctx.span_id).unwrap();
+        assert_eq!(s.attr("worker"), Some("3"));
+        assert_eq!(s.attr("stolen"), Some("true"));
+        assert_eq!(s.attr("missing"), None);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let spans = vec![rec(1, 1, 0, "root"), rec(1, 2, 1, "child")];
+        let doc = chrome_trace_json(&spans);
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        let events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        let e = &events[1];
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("name").and_then(Json::as_str), Some("child"));
+        let args = e.get("args").expect("args");
+        assert_eq!(args.get("parent_id").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn span_trees_nest_children_under_parents() {
+        let spans = vec![
+            rec(1, 1, 0, "root"),
+            rec(1, 2, 1, "child"),
+            rec(1, 3, 2, "grandchild"),
+            // Parent 99 was evicted: this span degrades to a root.
+            rec(7, 40, 99, "orphan"),
+        ];
+        let doc = span_trees_json(&spans);
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(parsed.get("spans").and_then(Json::as_usize), Some(4));
+        let traces = parsed.get("traces").and_then(Json::as_arr).unwrap();
+        assert_eq!(traces.len(), 2);
+        let t1 = &traces[0];
+        assert_eq!(t1.get("trace_id").and_then(Json::as_usize), Some(1));
+        let roots = t1.get("roots").and_then(Json::as_arr).unwrap();
+        assert_eq!(roots.len(), 1);
+        let child = &roots[0].get("children").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(child.get("name").and_then(Json::as_str), Some("child"));
+        let grand = &child.get("children").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(grand.get("name").and_then(Json::as_str), Some("grandchild"));
+        // The orphan is a root of its own trace.
+        let t7 = &traces[1];
+        let roots7 = t7.get("roots").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            roots7[0].get("name").and_then(Json::as_str),
+            Some("orphan")
+        );
+    }
+}

@@ -163,6 +163,164 @@ fn triage_json_over_saved_traces() {
 }
 
 #[test]
+fn analyze_writes_metrics_and_trace_outputs() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("analyze-metrics.json");
+    let trace = dir.join("analyze-trace.json");
+    let out = bin()
+        .args([
+            "analyze",
+            "--workload",
+            "st",
+            "--backend",
+            "native",
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let snap = autoanalyzer::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).expect("metrics file written"),
+    )
+    .expect("metrics snapshot is valid JSON");
+    let runs = snap
+        .get("counters")
+        .and_then(|c| c.get("pipeline_runs_total"))
+        .and_then(|v| v.as_usize());
+    assert!(runs >= Some(1), "snapshot must count the pipeline run: {runs:?}");
+
+    let doc = autoanalyzer::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).expect("trace file written"),
+    )
+    .expect("chrome trace is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "flight recorder captured spans");
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("pipeline_analyze")),
+        "trace must contain the pipeline_analyze span"
+    );
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn triage_writes_metrics_and_trace_outputs() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("triage-metrics.json");
+    let trace = dir.join("triage-trace.json");
+    let out = bin()
+        .args([
+            "triage",
+            "--synthetic",
+            "4",
+            "--backend",
+            "native",
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let snap = autoanalyzer::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).expect("metrics file written"),
+    )
+    .expect("metrics snapshot is valid JSON");
+    assert!(snap.get("counters").is_some());
+
+    let doc = autoanalyzer::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).expect("trace file written"),
+    )
+    .expect("chrome trace is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("fleet_analyze_batch")),
+        "trace must contain the fleet_analyze_batch span"
+    );
+    std::fs::remove_file(&metrics).ok();
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn selfcheck_flags_injected_slow_worker() {
+    let out = bin()
+        .args([
+            "selfcheck",
+            "--jobs",
+            "12",
+            "--workers",
+            "3",
+            "--slow-worker",
+            "1",
+            "--slow-ms",
+            "40",
+            "--backend",
+            "native",
+            "--json",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = autoanalyzer::util::json::Json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("selfcheck --json emits valid JSON");
+    assert_eq!(
+        doc.get("skewed").and_then(|v| v.as_bool()),
+        Some(true),
+        "injected 40ms skew must read as worker dissimilarity"
+    );
+    let outliers = doc
+        .get("outlier_workers")
+        .and_then(|v| v.as_arr())
+        .expect("outlier_workers array");
+    assert!(
+        outliers.iter().any(|w| w.as_str() == Some("1")),
+        "worker 1 is the outlier: {outliers:?}"
+    );
+}
+
+#[test]
+fn serve_listen_starts_endpoint() {
+    let out = bin()
+        .args([
+            "serve",
+            "--jobs",
+            "4",
+            "--workers",
+            "2",
+            "--listen",
+            "127.0.0.1:0",
+            "--backend",
+            "native",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("obs endpoint listening on 127.0.0.1:"),
+        "serve must announce the bound endpoint:\n{text}"
+    );
+}
+
+#[test]
 fn unknown_workload_fails_cleanly() {
     let out = bin()
         .args(["analyze", "--workload", "doom"])

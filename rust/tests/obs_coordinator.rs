@@ -35,11 +35,11 @@ fn run_jobs(n: u64, workers: usize) {
             vec![]
         };
         let spec = synthetic(4, 6, &inj, i);
-        coord.submit(AnalysisJob {
-            id: i,
-            trace: Arc::new(simulate(&spec, i)),
-            config: AnalysisConfig::default(),
-        });
+        coord.submit(AnalysisJob::new(
+            i,
+            Arc::new(simulate(&spec, i)),
+            AnalysisConfig::default(),
+        ));
     }
     for _ in 0..n {
         rx.recv().expect("outcome");

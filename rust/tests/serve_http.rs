@@ -1,0 +1,151 @@
+//! Live telemetry endpoint under load, and the self-analysis loop.
+//!
+//! The acceptance bar for the causal plane: all four HTTP routes must
+//! answer while the coordinator is actively chewing through jobs (not
+//! just at rest), and feeding the recorder's own worker spans back
+//! through the paper's pipeline must flag an injected slow worker.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use autoanalyzer::analysis::pipeline::AnalysisConfig;
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::obs::selfanalyze::{selfanalyze, SkewBackend};
+use autoanalyzer::obs::trace::recorder;
+use autoanalyzer::obs::ObsServer;
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::util::json::Json;
+use autoanalyzer::workloads::synthetic::synthetic;
+
+/// Raw-TCP GET; returns (status line, body).
+fn get(addr: SocketAddr, target: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(format!("GET {target} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+        .expect("write request");
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let status = response.lines().next().unwrap_or("").to_string();
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn endpoints_respond_while_coordinator_is_under_load() {
+    let server = ObsServer::start("127.0.0.1:0").expect("bind obs endpoint");
+    let addr = server.addr();
+
+    // Slow every worker down a little so the queue stays busy while we
+    // scrape — the point is concurrent service, not post-hoc dumps.
+    let factory = || {
+        Ok(Box::new(SkewBackend::new(
+            Box::new(NativeBackend),
+            Duration::from_millis(10),
+        )) as Box<dyn ClusterBackend>)
+    };
+    let (coord, rx) = Coordinator::start(2, 32, factory);
+    let trace = Arc::new(simulate(&synthetic(6, 8, &[], 11), 11));
+    let jobs = 12u64;
+    for i in 0..jobs {
+        coord.submit(AnalysisJob::new(i, trace.clone(), AnalysisConfig::default()));
+    }
+
+    // All four routes, scraped while the pool is mid-flight.
+    let (status, body) = get(addr, "/healthz");
+    assert!(status.contains("200"), "healthz: {status}");
+    assert_eq!(body, "ok\n");
+
+    let (status, body) = get(addr, "/metrics");
+    assert!(status.contains("200"), "metrics: {status}");
+    assert!(
+        body.contains("coordinator_jobs_submitted_total"),
+        "metrics must carry coordinator counters"
+    );
+
+    let (status, body) = get(addr, "/snapshot");
+    assert!(status.contains("200"), "snapshot: {status}");
+    let snap = Json::parse(&body).expect("snapshot parses");
+    assert!(snap.get("counters").is_some(), "snapshot has counters");
+
+    let (status, body) = get(addr, "/trace?n=64");
+    assert!(status.contains("200"), "trace: {status}");
+    let trees = Json::parse(&body).expect("span trees parse");
+    assert!(trees.get("traces").is_some(), "span-tree doc has traces");
+
+    let (status, body) = get(addr, "/trace?n=64&format=chrome");
+    assert!(status.contains("200"), "chrome trace: {status}");
+    let chrome = Json::parse(&body).expect("chrome trace parses");
+    assert!(chrome.get("traceEvents").is_some(), "chrome doc has events");
+
+    let (status, _) = get(addr, "/nope");
+    assert!(status.contains("404"), "unknown route: {status}");
+
+    for _ in 0..jobs {
+        assert!(rx.recv().expect("outcome").error.is_none());
+    }
+    coord.shutdown();
+
+    // Still answering after the coordinator is gone.
+    let (status, _) = get(addr, "/metrics");
+    assert!(status.contains("200"), "metrics after shutdown: {status}");
+    server.shutdown();
+}
+
+/// Dogfooding end to end at the library level: run a worker pool with
+/// one deliberately slowed worker, collect the flight recorder's span
+/// durations, and let the paper's own dissimilarity pipeline point at
+/// the slow worker.
+#[test]
+fn selfanalyze_flags_an_injected_slow_worker() {
+    let factory = || {
+        let inner = Box::new(NativeBackend) as Box<dyn ClusterBackend>;
+        // Worker threads are named `autoanalyzer-worker-{wid}`; slow
+        // down worker 1 only.
+        let wid = std::thread::current()
+            .name()
+            .and_then(|n| n.rsplit('-').next())
+            .and_then(|t| t.parse::<usize>().ok());
+        Ok(if wid == Some(1) {
+            Box::new(SkewBackend::new(inner, Duration::from_millis(30)))
+                as Box<dyn ClusterBackend>
+        } else {
+            inner
+        })
+    };
+    let (coord, rx) = Coordinator::start(3, 32, factory);
+
+    let root = autoanalyzer::obs::trace::span("selfanalyze_test_root");
+    let ctx = root.ctx();
+    let jobs = 18u64;
+    for i in 0..jobs {
+        let trace = Arc::new(simulate(&synthetic(6, 8, &[], i), i));
+        coord.submit(AnalysisJob::new(i, trace, AnalysisConfig::default()));
+    }
+    drop(root);
+    for _ in 0..jobs {
+        assert!(rx.recv().expect("outcome").error.is_none());
+    }
+    coord.shutdown();
+
+    // Only this test's causal trace: the recorder is process-global.
+    let spans: Vec<_> = recorder()
+        .recent(usize::MAX)
+        .into_iter()
+        .filter(|s| s.trace_id == ctx.trace_id)
+        .collect();
+    let sa = selfanalyze(&spans, &NativeBackend)
+        .expect("selfanalyze runs")
+        .expect("at least two workers observed");
+    assert!(sa.skewed(), "injected 30ms skew must read as dissimilarity");
+    assert!(
+        sa.outlier_workers().contains(&"1"),
+        "worker 1 is the outlier: {:?}",
+        sa.outlier_workers()
+    );
+}

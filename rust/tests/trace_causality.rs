@@ -1,0 +1,190 @@
+//! Cross-thread causality: spans opened on a submitter thread must be
+//! recorded as the parents of the worker-side `coordinator_job` spans,
+//! across every queue shard and through a work-steal. This is the
+//! property that makes the flight recorder's span trees trustworthy —
+//! a job's pipeline work is attributable to whoever submitted it, no
+//! matter which worker thread (or whose shard) ended up running it.
+//!
+//! The flight recorder is process-global, so every test filters
+//! `recent(usize::MAX)` down to its own `trace_id` before asserting —
+//! tests in this binary run concurrently and must not see each other.
+
+use std::sync::Arc;
+
+use autoanalyzer::analysis::pipeline::AnalysisConfig;
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
+use autoanalyzer::obs::trace::{recorder, span, SpanRecord};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn native_factory() -> anyhow::Result<Box<dyn ClusterBackend>> {
+    Ok(Box::new(NativeBackend))
+}
+
+fn job(id: u64, trace: &Arc<Trace>) -> AnalysisJob {
+    AnalysisJob::new(id, trace.clone(), AnalysisConfig::default())
+}
+
+/// All `coordinator_job` spans belonging to one causal trace.
+fn job_spans(trace_id: u64) -> Vec<SpanRecord> {
+    recorder()
+        .recent(usize::MAX)
+        .into_iter()
+        .filter(|s| s.trace_id == trace_id && s.name == "coordinator_job")
+        .collect()
+}
+
+#[test]
+fn submitter_span_parents_worker_spans_across_all_shards() {
+    let (coord, rx) = Coordinator::start(4, 64, native_factory);
+
+    // Pick job ids that collectively cover every shard, so the parent
+    // link is exercised on all four queues, not just one lucky hash.
+    let nshards = coord.shards();
+    let mut ids: Vec<u64> = Vec::new();
+    let mut covered = vec![false; nshards];
+    let mut id = 0u64;
+    while covered.iter().any(|c| !c) {
+        let sid = coord.shard_of(id);
+        if !covered[sid] {
+            covered[sid] = true;
+            ids.push(id);
+        }
+        id += 1;
+    }
+
+    let trace = Arc::new(simulate(&synthetic(4, 6, &[], 9), 9));
+    let parent = span("test_submit_root");
+    let ctx = parent.ctx();
+    // Jobs built while the parent span is the thread's current span:
+    // `AnalysisJob::new` captures it as the causal parent.
+    let jobs: Vec<AnalysisJob> = ids.iter().map(|&i| job(i, &trace)).collect();
+    for j in jobs {
+        coord.submit(j);
+    }
+    drop(parent);
+    for _ in 0..ids.len() {
+        assert!(rx.recv().expect("outcome").error.is_none());
+    }
+    coord.shutdown();
+
+    let spans = job_spans(ctx.trace_id);
+    let mut shards_seen = vec![false; nshards];
+    for &i in &ids {
+        let matching: Vec<&SpanRecord> = spans
+            .iter()
+            .filter(|s| s.attr("job") == Some(i.to_string().as_str()))
+            .collect();
+        assert_eq!(matching.len(), 1, "job {i}: want exactly one worker span");
+        let s = matching[0];
+        assert_eq!(
+            s.parent_id, ctx.span_id,
+            "job {i}: worker span must be parented under the submitter span"
+        );
+        assert!(s.attr("worker").is_some(), "job {i}: worker attr missing");
+        let sid: usize = s.attr("shard").expect("shard attr").parse().unwrap();
+        shards_seen[sid] = true;
+    }
+    assert!(
+        shards_seen.iter().all(|&c| c),
+        "causality must be observed on every shard: {shards_seen:?}"
+    );
+}
+
+/// Causality must survive a work-steal: a job popped from a *victim's*
+/// shard by an idle worker still records the submitter as its parent.
+/// Mirrors the coordinator's own steal test (7 jobs all hashing to
+/// shard 0, the first one big enough to pin worker 0); retried a few
+/// times because the steal itself depends on scheduler timing — but
+/// the parent assertions run unconditionally on every attempt.
+#[test]
+fn causality_survives_work_stealing() {
+    let mut saw_steal = false;
+    for _attempt in 0..3 {
+        let (coord, rx) = Coordinator::start(2, 64, native_factory);
+        let mut ids = Vec::new();
+        let mut id = 0u64;
+        while ids.len() < 7 {
+            if coord.shard_of(id) == 0 {
+                ids.push(id);
+            }
+            id += 1;
+        }
+        let big = Arc::new(simulate(
+            &synthetic(16, 24, &[(3, Inject::Imbalance)], 5),
+            5,
+        ));
+        let small = Arc::new(simulate(&synthetic(8, 12, &[], 5), 5));
+
+        let parent = span("test_steal_root");
+        let ctx = parent.ctx();
+        let batch: Vec<AnalysisJob> = ids
+            .iter()
+            .enumerate()
+            .map(|(k, &jid)| job(jid, if k == 0 { &big } else { &small }))
+            .collect();
+        let n = batch.len();
+        coord.submit_batch(batch);
+        drop(parent);
+        for _ in 0..n {
+            assert!(rx.recv().expect("outcome").error.is_none());
+        }
+        coord.shutdown();
+
+        let spans = job_spans(ctx.trace_id);
+        assert_eq!(spans.len(), n, "one worker span per job");
+        for s in &spans {
+            assert_eq!(
+                s.parent_id, ctx.span_id,
+                "job {:?}: parent must be the submitter span even if stolen",
+                s.attr("job")
+            );
+        }
+        if spans.iter().any(|s| s.attr("stolen") == Some("true")) {
+            saw_steal = true;
+            break;
+        }
+    }
+    assert!(
+        saw_steal,
+        "no attempt recorded a stolen job span; steal provenance untested"
+    );
+}
+
+/// The worker-side pipeline nests under the job span via the worker
+/// thread's span stack: `pipeline_analyze` is a child of
+/// `coordinator_job`, and each stage span is a child of
+/// `pipeline_analyze`.
+#[test]
+fn worker_side_pipeline_spans_nest_under_the_job_span() {
+    let (coord, rx) = Coordinator::start(1, 8, native_factory);
+    let trace = Arc::new(simulate(&synthetic(4, 6, &[], 3), 3));
+    let parent = span("test_nest_root");
+    let ctx = parent.ctx();
+    coord.submit(job(100, &trace));
+    drop(parent);
+    assert!(rx.recv().expect("outcome").error.is_none());
+    coord.shutdown();
+
+    let spans: Vec<SpanRecord> = recorder()
+        .recent(usize::MAX)
+        .into_iter()
+        .filter(|s| s.trace_id == ctx.trace_id)
+        .collect();
+    let job_span = spans
+        .iter()
+        .find(|s| s.name == "coordinator_job")
+        .expect("coordinator_job span");
+    let pipeline = spans
+        .iter()
+        .find(|s| s.name == "pipeline_analyze")
+        .expect("pipeline_analyze span");
+    assert_eq!(pipeline.parent_id, job_span.span_id);
+    let stage = spans
+        .iter()
+        .find(|s| s.name == "pipeline_stage_dissimilarity")
+        .expect("dissimilarity stage span");
+    assert_eq!(stage.parent_id, pipeline.span_id);
+}
