@@ -1,0 +1,146 @@
+//! Two-process remote triage: submit traces to a live ingest gateway
+//! over HTTP and verify the reports match in-process analysis.
+//!
+//!     cargo run --release --example remote_triage -- [jobs]
+//!
+//! The example re-executes itself as a gateway server process
+//! (`remote_triage __gateway`), scrapes the bound address from the
+//! child's stdout, then plays the remote submitter: a fleet of
+//! synthetic traces goes up through [`IngestClient`] (which carries a
+//! `traceparent` header for the client's causal span), reports come
+//! back by polling, and one of them is diffed — timings stripped —
+//! against `analysis::pipeline::analyze` run locally on the identical
+//! trace. The processes share nothing but the socket, which is the
+//! point: this is the paper's analysis loop as a network service.
+
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::Duration;
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::NativeBackend;
+use autoanalyzer::ingest::{Codec, Gateway, GatewayConfig, IngestClient};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::util::json::Json;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+/// Drop volatile keys (wall-clock timings) before comparing reports.
+fn strip(doc: &Json, key: &str) -> Json {
+    match doc {
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .filter(|(k, _)| k != key)
+                .map(|(k, v)| (k.clone(), strip(v, key)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+fn fleet_trace(i: u64) -> Trace {
+    let inj = match i % 3 {
+        0 => vec![(2usize, Inject::Imbalance)],
+        1 => vec![(4usize, Inject::DiskHog)],
+        _ => vec![],
+    };
+    simulate(&synthetic(8, 12, &inj, i), i)
+}
+
+/// Child role: run a gateway until the parent kills us.
+fn run_gateway() -> anyhow::Result<()> {
+    let gateway = Gateway::start("127.0.0.1:0", GatewayConfig::default(), || {
+        Ok(Box::new(NativeBackend) as Box<dyn autoanalyzer::cluster::ClusterBackend>)
+    })?;
+    // The parent scrapes this exact line for the address.
+    println!("gateway listening on {}", gateway.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.get(1).map(String::as_str) == Some("__gateway") {
+        return run_gateway();
+    }
+    let jobs: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+
+    // Process one: the gateway, as a genuinely separate process.
+    let exe = std::env::current_exe()?;
+    let mut child = std::process::Command::new(exe)
+        .arg("__gateway")
+        .stdout(std::process::Stdio::piped())
+        .spawn()?;
+    let addr = {
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        loop {
+            let line = lines.next().expect("gateway exited before binding")?;
+            if let Some(rest) = line.strip_prefix("gateway listening on ") {
+                break rest.trim().to_string();
+            }
+        }
+    };
+    println!("remote gateway up at {addr}");
+
+    // Process two (this one): the remote submitter.
+    let result = (|| -> anyhow::Result<()> {
+        let root = autoanalyzer::obs::trace::span("remote_triage_client");
+        let mut client = IngestClient::new(addr.clone());
+        let mut submitted = Vec::new();
+        for i in 0..jobs {
+            let trace = fleet_trace(i);
+            let codec = if i % 2 == 0 { Codec::Json } else { Codec::Xml };
+            let id = client.submit(&trace, codec)?;
+            submitted.push((i, id));
+        }
+        println!("submitted {jobs} traces over HTTP ({addr})");
+
+        let mut bottlenecked = 0u64;
+        for &(seed, id) in &submitted {
+            let report = client.wait_for_report(id, Duration::from_secs(60))?;
+            let cccrs = report
+                .get("dissimilarity")
+                .and_then(|d| d.get("cccrs"))
+                .and_then(Json::as_arr)
+                .map(<[Json]>::len)
+                .unwrap_or(0);
+            if cccrs > 0 {
+                bottlenecked += 1;
+            }
+            println!(
+                "job {id} (seed {seed}): {} dissimilarity CCCR(s)",
+                cccrs
+            );
+        }
+        drop(root);
+
+        // The acceptance check: the remote report for seed 0 must be
+        // identical (modulo wall-clock timings) to analyzing the same
+        // trace in this process.
+        let (seed, id) = submitted[0];
+        let remote = client.wait_for_report(id, Duration::from_secs(60))?;
+        let local = analyze(
+            &Arc::new(fleet_trace(seed)),
+            &NativeBackend,
+            &AnalysisConfig::default(),
+        )?
+        .run_report();
+        anyhow::ensure!(
+            strip(&remote, "timings").pretty() == strip(&local, "timings").pretty(),
+            "remote report diverged from in-process analysis"
+        );
+        println!("remote report matches in-process analysis (timings aside)");
+        anyhow::ensure!(bottlenecked >= jobs / 3, "expected injected bottlenecks");
+        println!("remote_triage OK");
+        Ok(())
+    })();
+
+    let _ = child.kill();
+    let _ = child.wait();
+    result
+}

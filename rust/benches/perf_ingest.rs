@@ -1,0 +1,108 @@
+//! `cargo bench --bench perf_ingest` — what the network front door
+//! costs: submit→poll→report round-trips through a live gateway over
+//! loopback HTTP, against the same analyses run in-process. The gap
+//! is the ingest plane's overhead (HTTP framing, codec decode, job
+//! store, polling latency). Case numbers land in the `BENCH_JSON_OUT`
+//! summary (see `eval::bench`) so CI tracks the trajectory.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::eval::bench::Bench;
+use autoanalyzer::ingest::{Codec, Gateway, GatewayConfig, IngestClient};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::util::stats::percentile;
+use autoanalyzer::util::tables::Table;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn make_traces(n: u64) -> Vec<Trace> {
+    (0..n)
+        .map(|i| {
+            let inj = match i % 3 {
+                0 => vec![(2usize, Inject::Imbalance)],
+                1 => vec![(3usize, Inject::DiskHog)],
+                _ => vec![],
+            };
+            simulate(&synthetic(8, 12, &inj, i), i)
+        })
+        .collect()
+}
+
+/// In-process baseline: analyze every trace directly. Returns
+/// per-trace latencies (seconds).
+fn run_in_process(traces: &[Trace]) -> Vec<f64> {
+    let config = AnalysisConfig::default();
+    traces
+        .iter()
+        .map(|t| {
+            let start = Instant::now();
+            let report = analyze(&Arc::new(t.clone()), &NativeBackend, &config).expect("analyze");
+            assert!(!report.program.is_empty());
+            start.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Remote path: HTTP submit → poll → fetch report, per trace, against
+/// a live gateway on loopback. Returns per-trace round-trip latencies.
+fn run_remote(traces: &[Trace], workers: usize) -> Vec<f64> {
+    let gw = Gateway::start(
+        "127.0.0.1:0",
+        GatewayConfig {
+            workers,
+            queue_cap: traces.len().max(8),
+            ..GatewayConfig::default()
+        },
+        || Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>),
+    )
+    .expect("gateway");
+    let mut client = IngestClient::new(gw.addr().to_string());
+    let mut lat = Vec::with_capacity(traces.len());
+    for t in traces {
+        let start = Instant::now();
+        let id = client.submit(t, Codec::Json).expect("submit");
+        let report = client
+            .wait_for_report(id, Duration::from_secs(120))
+            .expect("report");
+        assert!(report.get("dissimilarity").is_some());
+        lat.push(start.elapsed().as_secs_f64());
+    }
+    gw.shutdown();
+    lat
+}
+
+fn main() {
+    let n: u64 = if std::env::var("BENCH_FAST").ok().as_deref() == Some("1") {
+        12
+    } else {
+        64
+    };
+    let traces = make_traces(n);
+    let mut table = Table::new(
+        &format!("perf_ingest — {n} jobs (8p x 12r synthetic), loopback HTTP vs in-process"),
+        &["path", "mean (ms)", "p50 (ms)", "p99 (ms)", "vs in-process"],
+    );
+    let mut bench = Bench::new("perf_ingest");
+
+    let local = run_in_process(&traces);
+    let remote = run_remote(&traces, 2);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let base = mean(&local);
+    for (case, lat) in [("analyze in-process", &local), ("http round-trip", &remote)] {
+        let (m, p50, p99) = (mean(lat), percentile(lat, 50.0), percentile(lat, 99.0));
+        table.row(&[
+            case.to_string(),
+            format!("{:.2}", m * 1e3),
+            format!("{:.2}", p50 * 1e3),
+            format!("{:.2}", p99 * 1e3),
+            format!("{:.2}x", m / base),
+        ]);
+        bench.push_case(case, n, m, p50, p99);
+    }
+
+    println!("{}", table.render());
+    println!("{}", bench.report_with_metrics());
+}

@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::analysis::pipeline::{analyze, AnalysisConfig};
+use crate::analysis::pipeline::{analyze, AnalysisConfig, AnalysisReport};
 use crate::cluster::ClusterBackend;
 use crate::obs::trace::{span, span_child_of, SpanCtx};
 use crate::obs::Gauge;
@@ -64,6 +64,10 @@ pub struct JobOutcome {
     pub disparity_ccrs: usize,
     pub latency: Duration,
     pub error: Option<String>,
+    /// The full report on success — retained so service front doors
+    /// (the ingest gateway's job store) can serve it back to remote
+    /// clients without re-running the analysis.
+    pub report: Option<AnalysisReport>,
 }
 
 /// Typed rejection from [`Coordinator::try_submit`]: the target shard
@@ -213,12 +217,21 @@ impl Queue {
     }
 }
 
+/// Callback invoked (on the worker thread) the moment a worker pops a
+/// job — the signal service front doors use to move a job's visible
+/// state from *queued* to *running*.
+type StartHook = Arc<dyn Fn(u64) + Send + Sync>;
+
 /// The coordinator service. Results are delivered through an
 /// `std::sync::mpsc` channel returned by `start`.
 pub struct Coordinator {
     queue: Arc<Queue>,
     pub stats: Arc<CoordinatorStats>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Worker handles, drained by [`Coordinator::shutdown`] (behind a
+    /// mutex so shutdown works by shared reference — front doors hold
+    /// the coordinator in an `Arc`).
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    on_start: Arc<Mutex<Option<StartHook>>>,
 }
 
 impl Coordinator {
@@ -255,6 +268,7 @@ impl Coordinator {
             closed: AtomicBool::new(false),
         });
         let stats = Arc::new(CoordinatorStats::default());
+        let on_start: Arc<Mutex<Option<StartHook>>> = Arc::new(Mutex::new(None));
         let (tx, rx) = std::sync::mpsc::channel::<JobOutcome>();
 
         let mut handles = Vec::new();
@@ -263,6 +277,7 @@ impl Coordinator {
             let stats = stats.clone();
             let tx = tx.clone();
             let factory = backend_factory.clone();
+            let on_start = on_start.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("autoanalyzer-worker-{wid}"))
@@ -278,6 +293,10 @@ impl Coordinator {
                         };
                         crate::obs_gauge!("coordinator_workers").add(1);
                         while let Some((job, shard, stolen)) = queue.pop(wid) {
+                            let hook = on_start.lock().unwrap().clone();
+                            if let Some(hook) = hook {
+                                hook(job.id);
+                            }
                             let start = Instant::now();
                             crate::obs_gauge!("coordinator_workers_busy").add(1);
                             // Causal span for this job's worker-side
@@ -301,6 +320,7 @@ impl Coordinator {
                                     disparity_ccrs: report.disparity.ccrs.len(),
                                     latency: start.elapsed(),
                                     error: None,
+                                    report: Some(report),
                                 },
                                 Err(e) => {
                                     stats.failed.fetch_add(1, Ordering::Relaxed);
@@ -312,6 +332,7 @@ impl Coordinator {
                                         disparity_ccrs: 0,
                                         latency: start.elapsed(),
                                         error: Some(e.to_string()),
+                                        report: None,
                                     }
                                 }
                             };
@@ -337,10 +358,18 @@ impl Coordinator {
             Coordinator {
                 queue,
                 stats,
-                workers: handles,
+                workers: Mutex::new(handles),
+                on_start,
             },
             rx,
         )
+    }
+
+    /// Register a hook called (on the worker thread) when a worker pops
+    /// a job, before execution starts. One hook at a time; the ingest
+    /// gateway uses it to flip a job's visible state to *running*.
+    pub fn on_job_start(&self, hook: impl Fn(u64) + Send + Sync + 'static) {
+        *self.on_start.lock().unwrap() = Some(Arc::new(hook));
     }
 
     /// Shard index a job id routes to (exposed for tests and for
@@ -460,6 +489,62 @@ impl Coordinator {
         }
     }
 
+    /// Enqueue a whole batch without blocking: each shard lock is taken
+    /// once, filled to its cap, and whatever does not fit comes back as
+    /// typed [`QueueFull`] rejections. Returns the accepted job ids (in
+    /// submission order) alongside the rejections — the never-parks
+    /// front door the ingest batch endpoint uses.
+    pub fn try_submit_batch(
+        &self,
+        batch: Vec<AnalysisJob>,
+    ) -> (Vec<u64>, Vec<QueueFull>) {
+        crate::obs_histogram!("coordinator_submit_batch_size").observe(batch.len() as f64);
+        let batch_span =
+            span("coordinator_submit_batch").attr("jobs", batch.len().to_string());
+        let n = self.queue.shards.len();
+        let mut per_shard: Vec<VecDeque<AnalysisJob>> = (0..n).map(|_| VecDeque::new()).collect();
+        for mut job in batch {
+            if job.ctx.is_none() {
+                job.ctx = Some(batch_span.ctx());
+            }
+            let sid = self.queue.shard_of(job.id);
+            per_shard[sid].push_back(job);
+        }
+        let mut accepted = Vec::new();
+        let mut rejected = Vec::new();
+        for (sid, mut jobs) in per_shard.into_iter().enumerate() {
+            let shard = &self.queue.shards[sid];
+            let mut pushed = 0u64;
+            {
+                let mut q = shard.jobs.lock().unwrap();
+                while q.len() < self.queue.shard_cap {
+                    let Some(job) = jobs.pop_front() else { break };
+                    accepted.push(job.id);
+                    q.push_back(job);
+                    pushed += 1;
+                }
+                if pushed > 0 {
+                    self.queue.pending.fetch_add(pushed, Ordering::AcqRel);
+                    shard.depth.add(pushed as i64);
+                    crate::obs_gauge!("coordinator_queue_depth").add(pushed as i64);
+                }
+            }
+            if pushed > 0 {
+                self.record_submitted(pushed);
+                self.queue.wake_workers(true);
+            }
+            // Whatever is left found its shard full.
+            for job in jobs {
+                rejected.push(QueueFull {
+                    shard: sid,
+                    cap: self.queue.shard_cap,
+                    job,
+                });
+            }
+        }
+        (accepted, rejected)
+    }
+
     /// Current queue depth across all shards (for backpressure
     /// monitoring).
     pub fn queued(&self) -> usize {
@@ -470,12 +555,29 @@ impl Coordinator {
             .sum()
     }
 
-    /// Close the queue and join all workers (remaining jobs drain
-    /// first).
-    pub fn shutdown(self) {
+    /// Close the queue to new work without waiting: workers keep
+    /// draining what was already accepted and exit when their shards
+    /// are empty. Front doors check [`Coordinator::is_draining`] and
+    /// answer `503 Service Unavailable` while this is in effect.
+    pub fn begin_drain(&self) {
         self.queue.closed.store(true, Ordering::Release);
         self.queue.wake_workers(true);
-        for h in self.workers {
+    }
+
+    /// Whether [`Coordinator::begin_drain`] (or shutdown) has closed
+    /// the queue to new submissions.
+    pub fn is_draining(&self) -> bool {
+        self.queue.closed.load(Ordering::Acquire)
+    }
+
+    /// Close the queue and join all workers. Every job accepted before
+    /// the close drains first — `pop` only returns `None` once the
+    /// queue is both closed *and* empty, so no accepted job is lost.
+    /// Safe to call twice (the second call finds no handles to join).
+    pub fn shutdown(&self) {
+        self.begin_drain();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }

@@ -1,0 +1,223 @@
+//! `ingest::client` — a blocking client for the ingest gateway.
+//!
+//! [`IngestClient`] speaks the gateway's wire protocol over plain
+//! `std::net::TcpStream`s (one connection per request, `Connection:
+//! close`, matching the server). What it adds over raw sockets:
+//!
+//! - **Backpressure etiquette**: a `429 Too Many Requests` or `503
+//!   Service Unavailable` response is retried with jittered
+//!   exponential backoff, honoring the server's `Retry-After` header
+//!   as the floor for the next sleep. The jitter (up to +25%) keeps a
+//!   fleet of clients that were rejected together from retrying
+//!   together without ever undercutting the server's floor.
+//! - **Causal propagation**: every request carries a W3C-style
+//!   `traceparent` header for the caller's current span (when one is
+//!   open), so the submitting process appears as the root of the span
+//!   tree recorded on the gateway side.
+//! - **Polling**: [`IngestClient::wait_for_report`] polls
+//!   `GET /v1/jobs/{id}/report` until the job finishes (or the
+//!   deadline passes) and returns the parsed run-report.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ingest::http::{read_response, Response};
+use crate::obs::trace::current;
+use crate::trace::{json_codec, xml_codec, Trace};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Payload encoding for [`IngestClient::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    Json,
+    Xml,
+}
+
+/// Blocking HTTP client for one gateway address.
+pub struct IngestClient {
+    addr: String,
+    /// Attempts per request (first try + retries on 429/503).
+    max_attempts: u32,
+    /// First backoff sleep; doubles per retry (jittered up to +25%),
+    /// floored by the server's `Retry-After`.
+    base_backoff: Duration,
+    /// Per-connection read timeout.
+    timeout: Duration,
+    rng: Rng,
+}
+
+impl IngestClient {
+    /// A client for `addr` (e.g. `"127.0.0.1:7077"`) with default
+    /// retry policy: 5 attempts, 100ms base backoff.
+    pub fn new(addr: impl Into<String>) -> IngestClient {
+        IngestClient {
+            addr: addr.into(),
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(100),
+            timeout: Duration::from_secs(10),
+            // Seeded from the process id so a fleet of clients spawned
+            // together jitters differently without wall-clock access.
+            rng: Rng::new(0x1A6E_5701 ^ u64::from(std::process::id())),
+        }
+    }
+
+    /// Override the retry policy.
+    pub fn with_retry(mut self, max_attempts: u32, base_backoff: Duration) -> IngestClient {
+        self.max_attempts = max_attempts.max(1);
+        self.base_backoff = base_backoff;
+        self
+    }
+
+    /// Submit one trace; returns the assigned job id. Retries
+    /// backpressure rejections per the client's policy and fails with
+    /// the last rejection once attempts are exhausted.
+    pub fn submit(&mut self, trace: &Trace, codec: Codec) -> Result<u64> {
+        let (content_type, body) = match codec {
+            Codec::Json => ("application/json", json_codec::to_json(trace).pretty()),
+            Codec::Xml => ("application/xml", xml_codec::to_xml(trace)),
+        };
+        let resp = self.request_with_backoff("POST", "/v1/jobs", content_type, body.as_bytes())?;
+        if resp.status != 202 {
+            bail!("submit rejected: {} {} — {}", resp.status, resp.reason, resp.text());
+        }
+        let doc = Json::parse(&resp.text()).context("parse submit response")?;
+        doc.get("job")
+            .and_then(Json::as_usize)
+            .map(|id| id as u64)
+            .ok_or_else(|| anyhow!("submit response missing job id: {}", resp.text()))
+    }
+
+    /// Submit a batch of traces (JSON only); returns the accepted job
+    /// ids. A partially accepted batch is success — the rejected
+    /// remainder is the caller's to resubmit.
+    pub fn submit_batch(&mut self, traces: &[&Trace]) -> Result<Vec<u64>> {
+        let jobs: Vec<Json> = traces.iter().map(|t| json_codec::to_json(t)).collect();
+        let body = Json::obj().push("jobs", Json::Arr(jobs)).pretty();
+        let resp =
+            self.request_with_backoff("POST", "/v1/jobs:batch", "application/json", body.as_bytes())?;
+        if resp.status != 202 {
+            bail!("batch rejected: {} {} — {}", resp.status, resp.reason, resp.text());
+        }
+        let doc = Json::parse(&resp.text()).context("parse batch response")?;
+        let accepted = doc
+            .get("accepted")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("batch response missing accepted ids"))?;
+        Ok(accepted
+            .iter()
+            .filter_map(Json::as_usize)
+            .map(|id| id as u64)
+            .collect())
+    }
+
+    /// Status document for a job (`GET /v1/jobs/{id}`).
+    pub fn status(&mut self, id: u64) -> Result<Json> {
+        let resp = self.request("GET", &format!("/v1/jobs/{id}"), "", &[])?;
+        if resp.status != 200 {
+            bail!("status {id}: {} {} — {}", resp.status, resp.reason, resp.text());
+        }
+        Json::parse(&resp.text()).context("parse status response")
+    }
+
+    /// The retained run-report of a finished job, or `Ok(None)` while
+    /// the job is still queued/running.
+    pub fn report(&mut self, id: u64) -> Result<Option<Json>> {
+        let resp = self.request("GET", &format!("/v1/jobs/{id}/report"), "", &[])?;
+        match resp.status {
+            200 => Ok(Some(Json::parse(&resp.text()).context("parse report")?)),
+            202 => Ok(None),
+            _ => bail!(
+                "report {id}: {} {} — {}",
+                resp.status,
+                resp.reason,
+                resp.text()
+            ),
+        }
+    }
+
+    /// Poll until the job's report is available, up to `deadline`.
+    pub fn wait_for_report(&mut self, id: u64, deadline: Duration) -> Result<Json> {
+        let start = Instant::now();
+        let mut sleep = Duration::from_millis(10);
+        loop {
+            if let Some(report) = self.report(id)? {
+                return Ok(report);
+            }
+            if start.elapsed() > deadline {
+                bail!("job {id}: no report within {deadline:?}");
+            }
+            std::thread::sleep(sleep);
+            sleep = (sleep * 2).min(Duration::from_millis(250));
+        }
+    }
+
+    /// One request with jittered exponential backoff on 429/503.
+    fn request_with_backoff(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<Response> {
+        let mut backoff = self.base_backoff;
+        for attempt in 1..=self.max_attempts {
+            let resp = self.request(method, path, content_type, body)?;
+            if resp.status != 429 && resp.status != 503 {
+                return Ok(resp);
+            }
+            crate::obs_counter!("ingest_client_backpressure_total").inc();
+            if attempt == self.max_attempts {
+                return Ok(resp);
+            }
+            // The server's Retry-After (whole seconds) floors the
+            // client's own exponential schedule; jitter only extends
+            // the sleep (up to +25%) so the floor is always honored
+            // while a fleet rejected together never retries together.
+            let retry_after = resp
+                .header("retry-after")
+                .and_then(|v| v.parse::<u64>().ok())
+                .map(Duration::from_secs)
+                .unwrap_or(Duration::ZERO);
+            let base = backoff.max(retry_after);
+            let jitter = self.rng.range_f64(1.0, 1.25);
+            std::thread::sleep(base.mul_f64(jitter));
+            backoff = backoff.saturating_mul(2);
+        }
+        unreachable!("loop returns on last attempt");
+    }
+
+    /// One HTTP request on a fresh connection, with the caller's
+    /// current causal span propagated as `traceparent`.
+    fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<Response> {
+        use std::io::Write;
+        let mut stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connect {}", self.addr))?;
+        stream
+            .set_read_timeout(Some(self.timeout))
+            .context("set read timeout")?;
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.addr);
+        if let Some(ctx) = current() {
+            head.push_str(&format!("traceparent: {}\r\n", ctx.to_traceparent()));
+        }
+        if !body.is_empty() || method == "POST" {
+            head.push_str(&format!(
+                "Content-Type: {content_type}\r\nContent-Length: {}\r\n",
+                body.len()
+            ));
+        }
+        head.push_str("Connection: close\r\n\r\n");
+        stream.write_all(head.as_bytes()).context("write request head")?;
+        stream.write_all(body).context("write request body")?;
+        stream.flush().context("flush request")?;
+        read_response(&mut stream).with_context(|| format!("{method} {path}"))
+    }
+}

@@ -1,0 +1,655 @@
+//! `ingest::gateway` — the network front door over the sharded
+//! coordinator.
+//!
+//! [`Gateway`] binds one listener and serves two route families:
+//!
+//! - **Job ingest** (`/v1/...`): `POST /v1/jobs` decodes a trace
+//!   payload (JSON or XML, picked by `Content-Type`), enqueues it
+//!   through [`Coordinator::try_submit`], and answers `202 Accepted`
+//!   with a job id — or maps the typed [`QueueFull`] rejection to
+//!   `429 Too Many Requests` with a `Retry-After` header, making the
+//!   coordinator's backpressure visible on the wire instead of
+//!   parking the socket. `POST /v1/jobs:batch` does the same for a
+//!   whole fleet batch via `try_submit_batch`. `GET /v1/jobs/{id}`
+//!   and `GET /v1/jobs/{id}/report` read the bounded [`JobStore`].
+//! - **Telemetry**: everything else delegates to the same routes
+//!   [`crate::obs::serve`] exposes (`/healthz`, `/metrics`,
+//!   `/snapshot`, `/trace`), so one port serves both planes.
+//!
+//! Cross-process causality: a W3C-style `traceparent` request header
+//! deserializes into an [`SpanCtx`] that parents the gateway's
+//! `ingest_request` span, which in turn parents the worker-side
+//! `coordinator_job` span — the submitting *process* shows up as the
+//! root of the span tree the flight recorder serves at `/trace`.
+//!
+//! Shutdown is drain-first: [`Gateway::begin_drain`] closes the queue
+//! (new submissions get `503 Service Unavailable`) while workers
+//! finish what was accepted; [`Gateway::shutdown`] then joins
+//! everything. A submission lock serializes `try_submit` against the
+//! drain flag so no job can slip into a closing coordinator and be
+//! lost.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::pipeline::AnalysisConfig;
+use crate::cluster::ClusterBackend;
+use crate::coordinator::{AnalysisJob, Coordinator, QueueFull};
+use crate::ingest::http::{read_request, write_response, Request};
+use crate::ingest::store::{JobStore, JobState};
+use crate::obs::trace::{span_child_of, SpanCtx};
+use crate::trace::{json_codec, xml_codec, Trace};
+use crate::util::json::Json;
+use crate::{log_info, log_warn, obs_counter, obs_histogram};
+
+const JSON: &str = "application/json";
+const TEXT: &str = "text/plain; charset=utf-8";
+
+/// Tuning for one [`Gateway`].
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Coordinator worker threads (== queue shards).
+    pub workers: usize,
+    /// Total queued-job bound across shards; the backpressure knob.
+    pub queue_cap: usize,
+    /// Jobs (and their reports) retained by the [`JobStore`].
+    pub retention: usize,
+    /// `Retry-After` seconds advertised on `429` responses.
+    pub retry_after_secs: u64,
+    /// Analysis configuration applied to every submitted trace.
+    pub analysis: AnalysisConfig,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            workers: 4,
+            queue_cap: 64,
+            retention: 1024,
+            retry_after_secs: 1,
+            analysis: AnalysisConfig::default(),
+        }
+    }
+}
+
+/// Everything a request handler needs, shared with the collector and
+/// the shutdown path.
+struct Shared {
+    coord: Coordinator,
+    store: Arc<JobStore>,
+    next_id: AtomicU64,
+    /// Serializes `{draining check → try_submit}` against
+    /// `{set draining → begin_drain}`, closing the window where a job
+    /// could be accepted into a coordinator whose workers are exiting.
+    submit_lock: Mutex<()>,
+    draining: AtomicBool,
+    retry_after_secs: u64,
+    analysis: AnalysisConfig,
+}
+
+/// A running ingest gateway. [`Gateway::shutdown`] (or drop) drains the
+/// coordinator and joins every thread.
+pub struct Gateway {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    collector_handle: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `addr` (port 0 picks a free port), start the coordinator
+    /// worker pool, and serve ingest + telemetry routes on a background
+    /// accept loop.
+    pub fn start<F>(addr: &str, config: GatewayConfig, backend_factory: F) -> Result<Gateway>
+    where
+        F: Fn() -> Result<Box<dyn ClusterBackend>> + Send + Clone + 'static,
+    {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("gateway bind {addr}"))?;
+        let local = listener.local_addr().context("gateway local_addr")?;
+
+        let (coord, outcomes) = Coordinator::start(config.workers, config.queue_cap, backend_factory);
+        let store = Arc::new(JobStore::new(config.retention));
+
+        // Worker-side pop → visible `running` state + queue-wait sample.
+        let hook_store = store.clone();
+        coord.on_job_start(move |id| {
+            if let Some(wait) = hook_store.mark_running(id) {
+                obs_histogram!("ingest_queue_wait_seconds").observe(wait);
+            }
+        });
+
+        let shared = Arc::new(Shared {
+            coord,
+            store: store.clone(),
+            next_id: AtomicU64::new(1),
+            submit_lock: Mutex::new(()),
+            draining: AtomicBool::new(false),
+            retry_after_secs: config.retry_after_secs,
+            analysis: config.analysis,
+        });
+
+        // Collector: worker outcomes → retained reports. Ends when the
+        // workers exit (channel disconnects).
+        let collector_store = store;
+        let collector_handle = std::thread::Builder::new()
+            .name("autoanalyzer-ingest-collector".to_string())
+            .spawn(move || {
+                for outcome in outcomes {
+                    collector_store.complete(&outcome);
+                    obs_counter!("ingest_jobs_completed_total").inc();
+                }
+            })
+            .context("gateway collector spawn")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let conn_shared = shared.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("autoanalyzer-ingest-http".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            if let Err(err) = handle_conn(&conn_shared, stream) {
+                                log_warn!("gateway conn error: {err:#}");
+                            }
+                        }
+                        Err(err) => log_warn!("gateway accept error: {err}"),
+                    }
+                }
+            })
+            .context("gateway accept spawn")?;
+
+        log_info!("ingest gateway listening on {local}");
+        Ok(Gateway {
+            addr: local,
+            shared,
+            stop,
+            accept_handle: Some(accept_handle),
+            collector_handle: Some(collector_handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The job store, for in-process inspection (tests, examples).
+    pub fn store(&self) -> &JobStore {
+        &self.shared.store
+    }
+
+    /// Queue depth across coordinator shards.
+    pub fn queued(&self) -> usize {
+        self.shared.coord.queued()
+    }
+
+    /// Stop accepting new jobs (submissions answer `503`) while the
+    /// workers keep draining what was already accepted. Status/report
+    /// reads keep working. Idempotent.
+    pub fn begin_drain(&self) {
+        let _guard = self.shared.submit_lock.lock().unwrap();
+        self.shared.draining.store(true, Ordering::Release);
+        self.shared.coord.begin_drain();
+    }
+
+    /// Whether the gateway is refusing new submissions.
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::Acquire)
+    }
+
+    /// Drain the queue, join the workers and the collector, then stop
+    /// the accept loop. Every job accepted before the drain completes
+    /// and its report is retained.
+    pub fn shutdown(self) {
+        // Drop does the work; this method names the intent.
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.begin_drain();
+        // Workers exit once their shards are empty; joining them drops
+        // the last outcome sender, which ends the collector loop.
+        self.shared.coord.shutdown();
+        if let Some(h) = self.collector_handle.take() {
+            let _ = h.join();
+        }
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One response: status line, content type, body, extra headers.
+struct Reply {
+    status: &'static str,
+    content_type: &'static str,
+    body: String,
+    extra: Vec<(&'static str, String)>,
+}
+
+impl Reply {
+    fn json(status: &'static str, doc: Json) -> Reply {
+        Reply {
+            status,
+            content_type: JSON,
+            body: doc.pretty(),
+            extra: Vec::new(),
+        }
+    }
+
+    fn error(status: &'static str, message: impl Into<String>) -> Reply {
+        Reply::json(status, Json::obj().push("error", Json::Str(message.into())))
+    }
+}
+
+fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("set read timeout")?;
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(err) => {
+            obs_counter!("ingest_bad_requests_total").inc();
+            return match err.status() {
+                Some((status, body)) => {
+                    write_response(&mut stream, status, TEXT, body.as_bytes(), &[])
+                        .context("write error response")
+                }
+                None => Err(anyhow::Error::new(err).context("read request")),
+            };
+        }
+    };
+    let reply = route(shared, &req);
+    write_response(
+        &mut stream,
+        reply.status,
+        reply.content_type,
+        reply.body.as_bytes(),
+        &reply.extra,
+    )
+    .context("write response")
+}
+
+fn route(shared: &Shared, req: &Request) -> Reply {
+    if !req.path.starts_with("/v1/") {
+        // Telemetry plane: same routes as the standalone obs endpoint.
+        let (status, content_type, body) = crate::obs::serve::route(&req.method, &req.target);
+        return Reply {
+            status,
+            content_type,
+            body,
+            extra: Vec::new(),
+        };
+    }
+
+    obs_counter!("ingest_requests_total").inc();
+    // Cross-process causality: a submitter's `traceparent` header
+    // becomes the parent of this request's span, which (as the
+    // handler thread's current span) parents the job's worker-side
+    // `coordinator_job` span through `AnalysisJob::new`.
+    let remote = req
+        .header("traceparent")
+        .and_then(SpanCtx::from_traceparent);
+    let causal = span_child_of("ingest_request", remote)
+        .attr("path", req.path.clone())
+        .attr("method", req.method.clone());
+    let reply = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/jobs") => submit_one(shared, req),
+        ("POST", "/v1/jobs:batch") => submit_batch(shared, req),
+        ("GET", "/v1/jobs") => {
+            let n = req
+                .query_param("n")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(64);
+            Reply::json("200 OK", shared.store.list_json(n))
+        }
+        ("GET", path) if path.starts_with("/v1/jobs/") => job_read(shared, path),
+        ("GET", path) => Reply::error("404 Not Found", format!("no route for {path}")),
+        _ => Reply::error("405 Method Not Allowed", "method not allowed"),
+    };
+    drop(causal);
+    reply
+}
+
+/// Decode a trace payload by `Content-Type`: anything mentioning `xml`
+/// is the XML codec, everything else the JSON codec.
+fn decode_trace(req: &Request, body: &[u8]) -> Result<Trace, String> {
+    let content_type = req.header("content-type").unwrap_or(JSON);
+    if content_type.contains("xml") {
+        let text = std::str::from_utf8(body).map_err(|_| "XML body is not UTF-8".to_string())?;
+        xml_codec::from_xml(text).map_err(|e| format!("XML trace rejected: {e}"))
+    } else {
+        let doc = Json::parse_bytes(body).map_err(|e| format!("JSON body rejected: {e}"))?;
+        json_codec::from_json(&doc).map_err(|e| format!("JSON trace rejected: {e}"))
+    }
+}
+
+fn retry_extra(shared: &Shared) -> Vec<(&'static str, String)> {
+    vec![("Retry-After", shared.retry_after_secs.to_string())]
+}
+
+fn reject_reply(shared: &Shared, rejection: &QueueFull) -> Reply {
+    obs_counter!("ingest_jobs_rejected_total").inc();
+    let mut reply = Reply::json(
+        "429 Too Many Requests",
+        Json::obj()
+            .push("error", Json::Str("queue full".to_string()))
+            .push("shard", Json::Num(rejection.shard as f64))
+            .push("shard_cap", Json::Num(rejection.cap as f64))
+            .push(
+                "retry_after_s",
+                Json::Num(shared.retry_after_secs as f64),
+            ),
+    );
+    reply.extra = retry_extra(shared);
+    reply
+}
+
+fn draining_reply(shared: &Shared) -> Reply {
+    obs_counter!("ingest_jobs_rejected_total").inc();
+    let mut reply = Reply::error("503 Service Unavailable", "gateway is draining");
+    reply.extra = retry_extra(shared);
+    reply
+}
+
+fn submit_one(shared: &Shared, req: &Request) -> Reply {
+    let trace = match decode_trace(req, &req.body) {
+        Ok(t) => t,
+        Err(msg) => return Reply::error("400 Bad Request", msg),
+    };
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let job = AnalysisJob::new(id, Arc::new(trace), shared.analysis.clone());
+
+    // Accept into the store first so a fast worker can't complete the
+    // job before its entry exists; forget on rejection.
+    let guard = shared.submit_lock.lock().unwrap();
+    if shared.draining.load(Ordering::Acquire) {
+        drop(guard);
+        return draining_reply(shared);
+    }
+    shared.store.accept(id);
+    let verdict = shared.coord.try_submit(job);
+    drop(guard);
+
+    match verdict {
+        Ok(()) => {
+            obs_counter!("ingest_jobs_accepted_total").inc();
+            Reply::json(
+                "202 Accepted",
+                Json::obj()
+                    .push("job", Json::Num(id as f64))
+                    .push("status", Json::Str("queued".to_string())),
+            )
+        }
+        Err(rejection) => {
+            shared.store.forget(id);
+            reject_reply(shared, &rejection)
+        }
+    }
+}
+
+fn submit_batch(shared: &Shared, req: &Request) -> Reply {
+    let doc = match Json::parse_bytes(&req.body) {
+        Ok(d) => d,
+        Err(e) => return Reply::error("400 Bad Request", format!("JSON body rejected: {e}")),
+    };
+    // Either a bare array of trace documents or `{"jobs": [...]}`.
+    let items = match doc.as_arr().or_else(|| doc.get("jobs").and_then(Json::as_arr)) {
+        Some(items) => items,
+        None => {
+            return Reply::error(
+                "400 Bad Request",
+                "expected a JSON array of traces or {\"jobs\": [...]}",
+            )
+        }
+    };
+    if items.is_empty() {
+        return Reply::error("400 Bad Request", "empty batch");
+    }
+    let mut jobs = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        match json_codec::from_json(item) {
+            Ok(trace) => {
+                let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+                jobs.push(AnalysisJob::new(id, Arc::new(trace), shared.analysis.clone()));
+            }
+            Err(e) => {
+                return Reply::error(
+                    "400 Bad Request",
+                    format!("batch item {i} rejected: {e}"),
+                )
+            }
+        }
+    }
+
+    let guard = shared.submit_lock.lock().unwrap();
+    if shared.draining.load(Ordering::Acquire) {
+        drop(guard);
+        return draining_reply(shared);
+    }
+    for job in &jobs {
+        shared.store.accept(job.id);
+    }
+    let (accepted, rejections) = shared.coord.try_submit_batch(jobs);
+    drop(guard);
+
+    obs_counter!("ingest_jobs_accepted_total").add(accepted.len() as u64);
+    obs_counter!("ingest_jobs_rejected_total").add(rejections.len() as u64);
+    let mut rejected_ids = Vec::new();
+    for r in &rejections {
+        shared.store.forget(r.job.id);
+        rejected_ids.push(r.job.id);
+    }
+
+    let body = Json::obj()
+        .push(
+            "accepted",
+            Json::Arr(accepted.iter().map(|&id| Json::Num(id as f64)).collect()),
+        )
+        .push(
+            "rejected",
+            Json::Arr(rejected_ids.iter().map(|&id| Json::Num(id as f64)).collect()),
+        );
+    if accepted.is_empty() {
+        Reply {
+            status: "429 Too Many Requests",
+            content_type: JSON,
+            body: body
+                .push("error", Json::Str("queue full".to_string()))
+                .push("retry_after_s", Json::Num(shared.retry_after_secs as f64))
+                .pretty(),
+            extra: retry_extra(shared),
+        }
+    } else {
+        Reply::json("202 Accepted", body)
+    }
+}
+
+/// `GET /v1/jobs/{id}` and `GET /v1/jobs/{id}/report`.
+fn job_read(shared: &Shared, path: &str) -> Reply {
+    let rest = &path["/v1/jobs".len()..];
+    let rest = rest.strip_prefix('/').unwrap_or("");
+    let (id_part, want_report) = match rest.strip_suffix("/report") {
+        Some(id) => (id, true),
+        None => (rest, false),
+    };
+    let Ok(id) = id_part.parse::<u64>() else {
+        return Reply::error("400 Bad Request", format!("bad job id '{id_part}'"));
+    };
+    let Some(state) = shared.store.state(id) else {
+        return Reply::error("404 Not Found", format!("job {id} unknown (never seen or evicted)"));
+    };
+    if !want_report {
+        return Reply::json("200 OK", shared.store.status_json(id).unwrap_or_else(Json::obj));
+    }
+    match state {
+        JobState::Done => match shared.store.report(id) {
+            Some(report) => Reply::json("200 OK", report),
+            None => Reply::error("500 Internal Server Error", "done but report missing"),
+        },
+        JobState::Queued | JobState::Running => Reply::json(
+            "202 Accepted",
+            Json::obj()
+                .push("job", Json::Num(id as f64))
+                .push("status", Json::Str(state.name().to_string())),
+        ),
+        JobState::Failed => {
+            let status = shared.store.status_json(id).unwrap_or_else(Json::obj);
+            Reply {
+                status: "500 Internal Server Error",
+                content_type: JSON,
+                body: status.pretty(),
+                extra: Vec::new(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeBackend;
+    use crate::simulator::engine::simulate;
+    use crate::workloads::synthetic::synthetic;
+
+    fn native_factory() -> Result<Box<dyn ClusterBackend>> {
+        Ok(Box::new(NativeBackend))
+    }
+
+    fn small_trace_json() -> String {
+        let spec = synthetic(4, 6, &[], 3);
+        let trace = simulate(&spec, 3);
+        json_codec::to_json(&trace).pretty()
+    }
+
+    fn http(addr: SocketAddr, raw: &[u8]) -> (u16, String, Vec<(String, String)>) {
+        use std::io::Write;
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(raw).unwrap();
+        let resp = crate::ingest::http::read_response(&mut stream).unwrap();
+        (resp.status, resp.text(), resp.headers)
+    }
+
+    fn post(addr: SocketAddr, path: &str, content_type: &str, body: &str) -> (u16, String) {
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let (status, text, _) = http(addr, raw.as_bytes());
+        (status, text)
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (status, text, _) = http(addr, raw.as_bytes());
+        (status, text)
+    }
+
+    fn wait_done(addr: SocketAddr, id: u64) -> String {
+        for _ in 0..400 {
+            let (status, body) = get(addr, &format!("/v1/jobs/{id}/report"));
+            match status {
+                200 => return body,
+                202 => std::thread::sleep(Duration::from_millis(10)),
+                other => panic!("job {id}: unexpected status {other}: {body}"),
+            }
+        }
+        panic!("job {id} never completed");
+    }
+
+    #[test]
+    fn submits_polls_and_fetches_a_report() {
+        let gw = Gateway::start("127.0.0.1:0", GatewayConfig::default(), native_factory).unwrap();
+        let addr = gw.addr();
+
+        let (status, body) = post(addr, "/v1/jobs", JSON, &small_trace_json());
+        assert_eq!(status, 202, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        let id = doc.get("job").and_then(Json::as_usize).unwrap() as u64;
+
+        let report = wait_done(addr, id);
+        let report = Json::parse(&report).unwrap();
+        assert!(report.get("dissimilarity").is_some(), "report incomplete");
+
+        let (status, body) = get(addr, &format!("/v1/jobs/{id}"));
+        assert_eq!(status, 200);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("done"));
+
+        // Listing and telemetry plane on the same listener.
+        let (status, body) = get(addr, "/v1/jobs");
+        assert_eq!(status, 200);
+        assert!(Json::parse(&body).unwrap().get("jobs").is_some());
+        let (status, _) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("ingest_jobs_accepted_total"));
+
+        gw.shutdown();
+    }
+
+    #[test]
+    fn xml_payloads_are_accepted() {
+        let gw = Gateway::start("127.0.0.1:0", GatewayConfig::default(), native_factory).unwrap();
+        let spec = synthetic(4, 6, &[], 9);
+        let xml = xml_codec::to_xml(&simulate(&spec, 9));
+        let (status, body) = post(gw.addr(), "/v1/jobs", "application/xml", &xml);
+        assert_eq!(status, 202, "{body}");
+        let id = Json::parse(&body)
+            .unwrap()
+            .get("job")
+            .and_then(Json::as_usize)
+            .unwrap() as u64;
+        wait_done(gw.addr(), id);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn batch_submission_accepts_all() {
+        let gw = Gateway::start("127.0.0.1:0", GatewayConfig::default(), native_factory).unwrap();
+        let batch = format!(
+            "{{\"jobs\": [{}, {}]}}",
+            small_trace_json(),
+            small_trace_json()
+        );
+        let (status, body) = post(gw.addr(), "/v1/jobs:batch", JSON, &batch);
+        assert_eq!(status, 202, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        let accepted = doc.get("accepted").and_then(Json::as_arr).unwrap();
+        assert_eq!(accepted.len(), 2);
+        for id in accepted {
+            wait_done(gw.addr(), id.as_usize().unwrap() as u64);
+        }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn malformed_payloads_are_400() {
+        let gw = Gateway::start("127.0.0.1:0", GatewayConfig::default(), native_factory).unwrap();
+        let (status, body) = post(gw.addr(), "/v1/jobs", JSON, "{\"not\": \"a trace\"}");
+        assert_eq!(status, 400, "{body}");
+        let (status, _) = post(gw.addr(), "/v1/jobs:batch", JSON, "{\"jobs\": \"nope\"}");
+        assert_eq!(status, 400);
+        let (status, _) = get(gw.addr(), "/v1/jobs/not-a-number");
+        assert_eq!(status, 400);
+        let (status, _) = get(gw.addr(), "/v1/jobs/999999");
+        assert_eq!(status, 404);
+        gw.shutdown();
+    }
+}

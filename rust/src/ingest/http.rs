@@ -1,0 +1,487 @@
+//! `ingest::http` — the crate's shared HTTP/1.1 wire layer.
+//!
+//! One hardened request reader serves both HTTP surfaces ([`crate::obs::serve`]
+//! telemetry and the [`crate::ingest::gateway`] job front door), and one
+//! response reader serves the blocking [`crate::ingest::client`]. The rules
+//! every caller gets for free:
+//!
+//! - the request head (request line + headers) is bounded by
+//!   [`MAX_HEAD_BYTES`] — an oversized head is a typed
+//!   [`HttpError::HeadTooLarge`], rendered as `431`;
+//! - declared bodies are bounded by [`MAX_BODY_BYTES`] — `413`;
+//! - partial reads are tolerated: the reader loops until the head
+//!   terminator (and then until `Content-Length` bytes of body) arrive,
+//!   so a client that dribbles its request across many TCP segments
+//!   still parses;
+//! - a malformed request line, header, or `Content-Length` is a typed
+//!   [`HttpError::BadRequest`], rendered as `400` — never a silently
+//!   dropped connection.
+//!
+//! Everything is plain `std::net`; the crate's only dependency stays
+//! `anyhow` (and this module doesn't even use that).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Largest request/response head (start line + headers) accepted.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Largest declared body accepted. Trace payloads for big fleets are a
+/// few MiB of JSON; 64 MiB leaves headroom without letting one client
+/// balloon the process.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Typed failure from the wire layer. The first three map to HTTP
+/// status codes; `Io` is a connection-level failure (peer vanished,
+/// read timed out) where no response can usefully be written.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, header, or body framing — `400`.
+    BadRequest(String),
+    /// Head exceeded [`MAX_HEAD_BYTES`] — `431`.
+    HeadTooLarge,
+    /// Declared body exceeded [`MAX_BODY_BYTES`] — `413`.
+    BodyTooLarge,
+    /// Transport-level failure; drop the connection.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::HeadTooLarge => write!(f, "request head over {MAX_HEAD_BYTES} bytes"),
+            HttpError::BodyTooLarge => write!(f, "request body over {MAX_BODY_BYTES} bytes"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+impl HttpError {
+    /// The HTTP response this error renders as, when one can be sent.
+    pub fn status(&self) -> Option<(&'static str, String)> {
+        match self {
+            HttpError::BadRequest(m) => Some(("400 Bad Request", format!("{m}\n"))),
+            HttpError::HeadTooLarge => Some((
+                "431 Request Header Fields Too Large",
+                format!("request head over {MAX_HEAD_BYTES} bytes\n"),
+            )),
+            HttpError::BodyTooLarge => Some((
+                "413 Content Too Large",
+                format!("request body over {MAX_BODY_BYTES} bytes\n"),
+            )),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+/// One parsed HTTP request: start line, lower-cased headers, body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Raw request target (`/v1/jobs/7?verbose=1`).
+    pub target: String,
+    /// Target up to the first `?`.
+    pub path: String,
+    /// Target after the first `?` (empty when absent).
+    pub query: String,
+    /// `(name, value)` pairs; names lower-cased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Value of one `k=v` pair in the query string.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        query_param(&self.query, key)
+    }
+}
+
+/// One parsed HTTP response (client side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub reason: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy — diagnostics only).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Value of one `k=v` pair in a query string.
+pub fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|pair| pair.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+/// Read bytes until the `\r\n\r\n` head terminator, tolerating partial
+/// reads. Returns `(head bytes, leftover bytes already read past the
+/// terminator)`.
+fn read_head(stream: &mut TcpStream) -> Result<(Vec<u8>, Vec<u8>), HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    // Bytes already scanned for the terminator; rescans only overlap
+    // the previous read by the 3 bytes a straddling `\r\n\r\n` needs.
+    let mut scanned = 0usize;
+    loop {
+        let scan_from = scanned.saturating_sub(3);
+        if let Some(pos) = buf[scan_from..]
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .map(|p| scan_from + p)
+        {
+            let rest = buf.split_off(pos + 4);
+            buf.truncate(pos);
+            return Ok((buf, rest));
+        }
+        scanned = buf.len();
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Err(HttpError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed before any request bytes",
+                )));
+            }
+            return Err(HttpError::BadRequest(
+                "connection closed mid-head".to_string(),
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Parse `name: value` header lines (names lower-cased, values
+/// trimmed). Malformed lines are a [`HttpError::BadRequest`].
+fn parse_headers(lines: std::str::Lines<'_>) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadRequest(format!("malformed header line '{line}'")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::BadRequest(format!("malformed header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(headers)
+}
+
+/// Read the declared body: `leftover` head-read surplus first, then the
+/// stream until `Content-Length` bytes have arrived.
+fn read_body(
+    stream: &mut TcpStream,
+    headers: &[(String, String)],
+    mut leftover: Vec<u8>,
+) -> Result<Vec<u8>, HttpError> {
+    let declared = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| {
+            v.parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("bad content-length '{v}'")))
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if declared > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge);
+    }
+    if leftover.len() > declared {
+        leftover.truncate(declared);
+    }
+    let mut body = leftover;
+    let mut chunk = [0u8; 8192];
+    while body.len() < declared {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(HttpError::BadRequest(format!(
+                "body truncated at {} of {declared} bytes",
+                body.len()
+            )));
+        }
+        let take = n.min(declared - body.len());
+        body.extend_from_slice(&chunk[..take]);
+    }
+    Ok(body)
+}
+
+/// Read and parse one HTTP/1.1 request from `stream`.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, HttpError> {
+    let (head, leftover) = read_head(stream)?;
+    let head = String::from_utf8(head)
+        .map_err(|_| HttpError::BadRequest("request head is not UTF-8".to_string()))?;
+    let mut lines = head.lines();
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) => (m, t, v),
+        _ => {
+            return Err(HttpError::BadRequest(format!(
+                "malformed request line '{request_line}'"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/") {
+        return Err(HttpError::BadRequest(format!(
+            "not an HTTP version: '{version}'"
+        )));
+    }
+    let headers = parse_headers(lines)?;
+    let body = read_body(stream, &headers, leftover)?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    Ok(Request {
+        method: method.to_string(),
+        target: target.to_string(),
+        path,
+        query,
+        headers,
+        body,
+    })
+}
+
+/// Write one `Connection: close` HTTP/1.1 response. `extra` headers
+/// (e.g. `Retry-After`) ride between the standard ones and the blank
+/// line.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Read and parse one HTTP/1.1 response (client side). Without a
+/// `Content-Length` the body is read to EOF (our servers always send
+/// one plus `Connection: close`).
+pub fn read_response(stream: &mut TcpStream) -> Result<Response, HttpError> {
+    let (head, leftover) = read_head(stream)?;
+    let head = String::from_utf8(head)
+        .map_err(|_| HttpError::BadRequest("response head is not UTF-8".to_string()))?;
+    let mut lines = head.lines();
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/") {
+        return Err(HttpError::BadRequest(format!(
+            "malformed status line '{status_line}'"
+        )));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| HttpError::BadRequest(format!("bad status in '{status_line}'")))?;
+    let reason = parts.next().unwrap_or("").to_string();
+    let headers = parse_headers(lines)?;
+    let body = if headers.iter().any(|(k, _)| k == "content-length") {
+        read_body(stream, &headers, leftover)?
+    } else {
+        let mut body = leftover;
+        stream.read_to_end(&mut body)?;
+        body
+    };
+    Ok(Response {
+        status,
+        reason,
+        headers,
+        body,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Run `client` against a one-shot server that parses a request and
+    /// reports the outcome.
+    fn with_pair<C, R>(client: C) -> (Result<Request, HttpError>, R)
+    where
+        C: FnOnce(TcpStream) -> R + Send + 'static,
+        R: Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            client(stream)
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let req = read_request(&mut conn);
+        (req, t.join().unwrap())
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let (req, _) = with_pair(|mut s| {
+            s.write_all(
+                b"POST /v1/jobs?codec=json HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+            )
+            .unwrap();
+        });
+        let req = req.unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/jobs");
+        assert_eq!(req.query_param("codec"), Some("json"));
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("Content-Type"), Some("application/json"));
+        assert_eq!(req.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn tolerates_partial_reads() {
+        let (req, _) = with_pair(|mut s| {
+            // Dribble the request across many writes with pauses, the
+            // worst-case segmentation a LAN peer can produce.
+            let raw = b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+            for chunk in raw.chunks(7) {
+                s.write_all(chunk).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+        });
+        let req = req.unwrap();
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let (req, _) = with_pair(|mut s| {
+            let huge = format!(
+                "GET / HTTP/1.1\r\nX-Junk: {}\r\n\r\n",
+                "a".repeat(MAX_HEAD_BYTES + 1024)
+            );
+            // The server may reset the connection as soon as it gives
+            // up on the head; ignore late write errors.
+            let _ = s.write_all(huge.as_bytes());
+        });
+        assert!(matches!(req, Err(HttpError::HeadTooLarge)), "{req:?}");
+        let (status, _) = HttpError::HeadTooLarge.status().unwrap();
+        assert!(status.starts_with("431"));
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let (req, _) = with_pair(|mut s| {
+            let head = format!(
+                "POST /v1/jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            );
+            let _ = s.write_all(head.as_bytes());
+        });
+        assert!(matches!(req, Err(HttpError::BodyTooLarge)), "{req:?}");
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        let (req, _) = with_pair(|mut s| {
+            s.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        });
+        assert!(matches!(req, Err(HttpError::BadRequest(_))), "{req:?}");
+    }
+
+    #[test]
+    fn malformed_header_is_400() {
+        let (req, _) = with_pair(|mut s| {
+            s.write_all(b"GET / HTTP/1.1\r\nno colon here\r\n\r\n").unwrap();
+        });
+        assert!(matches!(req, Err(HttpError::BadRequest(_))), "{req:?}");
+    }
+
+    #[test]
+    fn truncated_body_is_400() {
+        let (req, _) = with_pair(|mut s| {
+            s.write_all(b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\nshort")
+                .unwrap();
+            // Close without sending the rest.
+        });
+        assert!(matches!(req, Err(HttpError::BadRequest(_))), "{req:?}");
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            write_response(
+                &mut conn,
+                "429 Too Many Requests",
+                "application/json",
+                b"{\"error\":\"queue full\"}",
+                &[("Retry-After", "2".to_string())],
+            )
+            .unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let resp = read_response(&mut stream).unwrap();
+        t.join().unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.reason, "Too Many Requests");
+        assert_eq!(resp.header("retry-after"), Some("2"));
+        assert_eq!(resp.text(), "{\"error\":\"queue full\"}");
+    }
+
+    #[test]
+    fn query_param_parses_pairs() {
+        assert_eq!(query_param("n=5&format=chrome", "n"), Some("5"));
+        assert_eq!(query_param("n=5&format=chrome", "format"), Some("chrome"));
+        assert_eq!(query_param("n=5", "format"), None);
+        assert_eq!(query_param("", "n"), None);
+    }
+}

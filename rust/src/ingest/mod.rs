@@ -1,0 +1,35 @@
+//! The network ingest plane: remote job submission over the sharded
+//! coordinator.
+//!
+//! Everything before this module analyzed traces in-process. The
+//! ingest plane is the multi-process front door the ROADMAP promised:
+//! a remote submitter POSTs a trace (either codec) to a [`gateway`],
+//! the gateway enqueues it through the coordinator's non-parking
+//! `try_submit` path, a bounded [`store::JobStore`] retains the
+//! outcome, and the submitter polls for the identical run-report it
+//! would have gotten from [`crate::analysis::pipeline::analyze`]
+//! locally. Backpressure crosses the wire as `429 Too Many Requests`
+//! + `Retry-After` (queue full) and `503 Service Unavailable`
+//! (draining for shutdown); causality crosses it as a W3C-style
+//! `traceparent` header, so one span tree covers submitter → gateway
+//! → worker → pipeline stage.
+//!
+//! Layout:
+//! - [`http`] — the shared, hardened HTTP/1.1 wire layer (bounded
+//!   head/body, partial-read tolerant, typed 400/413/431), also used
+//!   by the [`crate::obs::serve`] telemetry endpoint;
+//! - [`store`] — bounded job-state + report retention
+//!   (overwrite-oldest, like the flight recorder);
+//! - [`gateway`] — the listener: `/v1` job routes plus the telemetry
+//!   routes on one port;
+//! - [`client`] — a blocking client with jittered exponential backoff
+//!   that honors `Retry-After`.
+
+pub mod client;
+pub mod gateway;
+pub mod http;
+pub mod store;
+
+pub use client::{Codec, IngestClient};
+pub use gateway::{Gateway, GatewayConfig};
+pub use store::{JobState, JobStore};

@@ -1,0 +1,325 @@
+//! `ingest::store` — bounded retention of submitted jobs and their
+//! reports.
+//!
+//! The gateway accepts jobs from remote clients that come back later to
+//! ask "what happened to job 17?". [`JobStore`] answers that with the
+//! same memory discipline as the flight recorder: a hard capacity with
+//! overwrite-oldest retention, so a long-lived gateway holds the most
+//! recent `cap` jobs' states (and their retained run-reports) and
+//! nothing older. Evicted jobs read as unknown (`404` at the HTTP
+//! layer), which a polling client treats as "you waited too long".
+//!
+//! States move strictly forward: `Queued` (accepted into the
+//! coordinator) → `Running` (a worker popped it) → `Done` (report
+//! retained) or `Failed` (error retained). A job rejected by
+//! backpressure is [`JobStore::forget`]-ed — it was never accepted, so
+//! it must not occupy retention.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::JobOutcome;
+use crate::util::json::Json;
+
+/// Lifecycle of one accepted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    state: JobState,
+    accepted: Instant,
+    /// Seconds between acceptance and a worker starting the job
+    /// (queue wait), once known.
+    queue_wait_s: Option<f64>,
+    /// Worker-side execution seconds, once known.
+    exec_s: Option<f64>,
+    /// Retained run-report (`Done` only).
+    report: Option<Json>,
+    /// Retained error (`Failed` only).
+    error: Option<String>,
+    summary: Option<String>,
+}
+
+struct Inner {
+    /// Insertion order, oldest first — the eviction queue.
+    order: VecDeque<u64>,
+    map: HashMap<u64, Entry>,
+}
+
+/// Bounded job-state store (overwrite-oldest retention).
+pub struct JobStore {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl JobStore {
+    /// A store retaining at most `cap` jobs (min 1).
+    pub fn new(cap: usize) -> JobStore {
+        JobStore {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                order: VecDeque::new(),
+                map: HashMap::new(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Record an accepted job as `Queued`, evicting the oldest entry
+    /// when over capacity.
+    pub fn accept(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(id, Entry {
+            state: JobState::Queued,
+            accepted: Instant::now(),
+            queue_wait_s: None,
+            exec_s: None,
+            report: None,
+            error: None,
+            summary: None,
+        }).is_none() {
+            inner.order.push_back(id);
+        }
+        while inner.order.len() > self.cap {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+                crate::obs_counter!("ingest_store_evicted_total").inc();
+            }
+        }
+    }
+
+    /// Drop a job that was never actually accepted (backpressure
+    /// rejection after an optimistic `accept`).
+    pub fn forget(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.remove(&id).is_some() {
+            inner.order.retain(|&x| x != id);
+        }
+    }
+
+    /// A worker popped the job: `Queued` → `Running`, queue wait
+    /// measured. Returns the wait in seconds when the job is known.
+    pub fn mark_running(&self, id: u64) -> Option<f64> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.map.get_mut(&id)?;
+        let wait = e.accepted.elapsed().as_secs_f64();
+        if e.state == JobState::Queued {
+            e.state = JobState::Running;
+            e.queue_wait_s = Some(wait);
+        }
+        e.queue_wait_s
+    }
+
+    /// Record a finished job from its coordinator outcome, retaining
+    /// the run-report (or the error).
+    pub fn complete(&self, outcome: &JobOutcome) {
+        let report = outcome.report.as_ref().map(|r| r.run_report());
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.map.get_mut(&outcome.id) else {
+            // Evicted while running; nothing to retain.
+            return;
+        };
+        e.exec_s = Some(outcome.latency.as_secs_f64());
+        if e.queue_wait_s.is_none() {
+            // No `Running` transition was observed (no start hook);
+            // attribute everything outside execution to queueing.
+            e.queue_wait_s =
+                Some((e.accepted.elapsed().as_secs_f64() - outcome.latency.as_secs_f64()).max(0.0));
+        }
+        match &outcome.error {
+            None => {
+                e.state = JobState::Done;
+                e.report = report;
+                e.summary = Some(outcome.summary.clone());
+            }
+            Some(err) => {
+                e.state = JobState::Failed;
+                e.error = Some(err.clone());
+            }
+        }
+    }
+
+    /// Current state of a job, if retained.
+    pub fn state(&self, id: u64) -> Option<JobState> {
+        self.inner.lock().unwrap().map.get(&id).map(|e| e.state)
+    }
+
+    /// Retained run-report of a `Done` job.
+    pub fn report(&self, id: u64) -> Option<Json> {
+        self.inner
+            .lock()
+            .unwrap()
+            .map
+            .get(&id)
+            .and_then(|e| e.report.clone())
+    }
+
+    /// Status document for `GET /v1/jobs/{id}`.
+    pub fn status_json(&self, id: u64) -> Option<Json> {
+        let inner = self.inner.lock().unwrap();
+        let e = inner.map.get(&id)?;
+        let mut doc = Json::obj()
+            .push("job", Json::Num(id as f64))
+            .push("status", Json::Str(e.state.name().to_string()));
+        if let Some(w) = e.queue_wait_s {
+            doc = doc.push("queue_wait_s", Json::Num(w));
+        }
+        if let Some(x) = e.exec_s {
+            doc = doc.push("exec_s", Json::Num(x));
+        }
+        if let Some(s) = &e.summary {
+            doc = doc.push("summary", Json::Str(s.clone()));
+        }
+        if let Some(err) = &e.error {
+            doc = doc.push("error", Json::Str(err.clone()));
+        }
+        Some(doc)
+    }
+
+    /// Recent jobs (oldest first) for `GET /v1/jobs`.
+    pub fn list_json(&self, n: usize) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let jobs: Vec<Json> = inner
+            .order
+            .iter()
+            .rev()
+            .take(n)
+            .rev()
+            .filter_map(|id| {
+                inner.map.get(id).map(|e| {
+                    Json::obj()
+                        .push("job", Json::Num(*id as f64))
+                        .push("status", Json::Str(e.state.name().to_string()))
+                })
+            })
+            .collect();
+        Json::obj()
+            .push("retained", Json::Num(inner.map.len() as f64))
+            .push("capacity", Json::Num(self.cap as f64))
+            .push("jobs", Json::Arr(jobs))
+    }
+
+    /// Count of retained jobs in one state.
+    pub fn count(&self, state: JobState) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .map
+            .values()
+            .filter(|e| e.state == state)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn done_outcome(id: u64) -> JobOutcome {
+        JobOutcome {
+            id,
+            summary: format!("job {id} ok"),
+            dissimilarity_cccrs: 0,
+            disparity_ccrs: 0,
+            latency: Duration::from_millis(5),
+            error: None,
+            report: None,
+        }
+    }
+
+    #[test]
+    fn lifecycle_queued_running_done() {
+        let store = JobStore::new(8);
+        store.accept(1);
+        assert_eq!(store.state(1), Some(JobState::Queued));
+        assert!(store.mark_running(1).is_some());
+        assert_eq!(store.state(1), Some(JobState::Running));
+        store.complete(&done_outcome(1));
+        assert_eq!(store.state(1), Some(JobState::Done));
+        let status = store.status_json(1).unwrap();
+        assert_eq!(status.get("status").and_then(Json::as_str), Some("done"));
+        assert!(status.get("queue_wait_s").is_some());
+        assert!(status.get("exec_s").is_some());
+    }
+
+    #[test]
+    fn failed_jobs_retain_their_error() {
+        let store = JobStore::new(8);
+        store.accept(2);
+        let mut o = done_outcome(2);
+        o.error = Some("backend exploded".to_string());
+        store.complete(&o);
+        assert_eq!(store.state(2), Some(JobState::Failed));
+        let status = store.status_json(2).unwrap();
+        assert_eq!(
+            status.get("error").and_then(Json::as_str),
+            Some("backend exploded")
+        );
+        assert!(store.report(2).is_none());
+    }
+
+    #[test]
+    fn retention_evicts_oldest() {
+        let store = JobStore::new(3);
+        for id in 0..10 {
+            store.accept(id);
+        }
+        assert_eq!(store.len(), 3);
+        assert!(store.state(6).is_none(), "old jobs evicted");
+        assert!(store.state(7).is_some() && store.state(9).is_some());
+        let list = store.list_json(100);
+        assert_eq!(list.get("retained").and_then(Json::as_usize), Some(3));
+        assert_eq!(list.get("capacity").and_then(Json::as_usize), Some(3));
+        assert_eq!(list.get("jobs").and_then(Json::as_arr).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn forget_removes_rejected_jobs() {
+        let store = JobStore::new(4);
+        store.accept(5);
+        store.forget(5);
+        assert!(store.state(5).is_none());
+        assert_eq!(store.len(), 0);
+        // Forgetting does not corrupt the eviction order.
+        for id in 10..20 {
+            store.accept(id);
+        }
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn completion_after_eviction_is_a_noop() {
+        let store = JobStore::new(1);
+        store.accept(1);
+        store.accept(2); // evicts 1
+        store.complete(&done_outcome(1));
+        assert!(store.state(1).is_none());
+        assert_eq!(store.state(2), Some(JobState::Queued));
+    }
+}

@@ -62,6 +62,22 @@
 //! live, and [`obs::selfanalyze`] closes the loop by running the
 //! paper's own dissimilarity pipeline over the recorder's worker spans
 //! (the `selfcheck` subcommand). See README.md for the repository map.
+//!
+//! # Ingest plane
+//!
+//! [`ingest`] turns the crate into a *service*: an HTTP gateway
+//! (`autoanalyzer gateway`) accepts trace payloads from remote
+//! processes (`POST /v1/jobs`, either codec), enqueues them through the
+//! coordinator's non-parking `try_submit` path, and retains run-reports
+//! in a bounded job store for `GET /v1/jobs/{id}/report` polling.
+//! Queue-full backpressure surfaces as `429` + `Retry-After` (which
+//! [`ingest::IngestClient`] honors with jittered exponential backoff),
+//! drain-for-shutdown as `503`, and a `traceparent` request header
+//! stitches the submitter's causal span to the worker-side span tree
+//! across the process boundary. The telemetry routes above are mounted
+//! on the same listener, and the HTTP wire layer they share
+//! ([`ingest::http`]) bounds head/body sizes and answers malformed
+//! input with typed 400/413/431 responses.
 
 // Style choices this crate makes deliberately (hand-rolled JSON codec,
 // index-heavy numeric loops mirroring the paper's pseudocode).
@@ -82,6 +98,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod eval;
 pub mod fleet;
+pub mod ingest;
 pub mod metrics;
 pub mod obs;
 pub mod regions;

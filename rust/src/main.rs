@@ -6,6 +6,7 @@
 //!   analyze-trace  run the pipeline over a saved trace (JSON or XML)
 //!   simulate       simulate a workload and save the trace
 //!   serve          coordinator service demo: stream analysis jobs
+//!   gateway        network ingest: remote job submission + telemetry on one port
 //!   triage         fleet triage: batch-analyze many traces, group by signature
 //!   selfcheck      dogfood: run the paper pipeline over our own worker spans
 //!   list           list workloads and experiments
@@ -30,6 +31,7 @@ use autoanalyzer::cluster::ClusterBackend;
 use autoanalyzer::coordinator::{AnalysisJob, Coordinator};
 use autoanalyzer::eval::{run_experiment, EXPERIMENTS};
 use autoanalyzer::fleet::analyze_batch;
+use autoanalyzer::ingest::{Gateway, GatewayConfig};
 use autoanalyzer::obs::selfanalyze::{selfanalyze, SkewBackend};
 use autoanalyzer::obs::ObsServer;
 use autoanalyzer::simulator::engine::simulate;
@@ -51,10 +53,13 @@ USAGE:
   autoanalyzer analyze --workload <name> [--variant <v>] [--seed N]
                        [--backend ...] [--save-trace FILE]
                        [--metrics-out FILE] [--trace-out FILE]
-  autoanalyzer analyze-trace <FILE> [--backend ...]
+  autoanalyzer analyze-trace <FILE> [--backend ...] [--json] [--report-out FILE]
   autoanalyzer simulate --workload <name> [--seed N] --out FILE [--format json|xml]
   autoanalyzer serve [--jobs N] [--workers K] [--backend ...] [--metrics]
                      [--listen ADDR]   (live /metrics /healthz /snapshot /trace)
+  autoanalyzer gateway [--listen ADDR] [--workers K] [--queue-cap N]
+                       [--retention N] [--retry-after S] [--run-secs S]
+                       [--backend ...]   (POST /v1/jobs + telemetry, one port)
   autoanalyzer triage [FILE ...] [--synthetic N] [--seed N] [--backend ...] [--json]
                       [--metrics-out FILE] [--trace-out FILE]
   autoanalyzer selfcheck [--jobs N] [--workers K] [--slow-worker W] [--slow-ms MS]
@@ -222,8 +227,54 @@ fn cmd_analyze_trace(args: &Args) -> Result<()> {
         args.str_or("artifacts", "artifacts"),
     )?;
     let report = analyze(&trace, backend.as_ref(), &AnalysisConfig::default())?;
-    println!("{}", report.render());
+    // `--report-out` / `--json` emit the machine-readable run-report —
+    // the same document the ingest gateway retains, so remote and
+    // in-process results can be diffed directly.
+    if let Some(out) = args.str_opt("report-out") {
+        std::fs::write(out, report.run_report().pretty())
+            .with_context(|| format!("writing {out}"))?;
+        autoanalyzer::log_info!("run report written to {out}");
+    }
+    if args.flag("json") {
+        println!("{}", report.run_report().pretty());
+    } else {
+        println!("{}", report.render());
+    }
     Ok(())
+}
+
+/// The network front door: job ingest (`POST /v1/jobs`, job store
+/// reads) and the telemetry routes on one listener. Runs until
+/// `--run-secs` elapses (0 = forever), then drains and exits.
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let config = GatewayConfig {
+        workers: args.usize_or("workers", 4)?,
+        queue_cap: args.usize_or("queue-cap", 64)?,
+        retention: args.usize_or("retention", 1024)?,
+        retry_after_secs: args.u64_or("retry-after", 1)?,
+        analysis: AnalysisConfig::default(),
+    };
+    let backend_name = args.str_or("backend", "auto").to_string();
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    let gateway = Gateway::start(args.str_or("listen", "127.0.0.1:0"), config, move || {
+        select_backend(&backend_name, &artifacts)
+    })?;
+    // Scripts (and the e2e CI job) scrape this line for the bound
+    // address, so print + flush it before parking.
+    println!("gateway listening on {}", gateway.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let run_secs = args.u64_or("run-secs", 0)?;
+    if run_secs > 0 {
+        std::thread::sleep(Duration::from_secs(run_secs));
+        println!("gateway run window over; draining");
+        gateway.shutdown();
+        Ok(())
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -455,6 +506,7 @@ fn main() {
         Some("analyze-trace") => cmd_analyze_trace(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("gateway") => cmd_gateway(&args),
         Some("triage") => cmd_triage(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
         Some("list") => {

@@ -15,11 +15,14 @@
 //! One accept-loop thread, one connection at a time, `Connection:
 //! close` on every response: deliberately minimal, because the crate's
 //! only dependency is `anyhow` and a telemetry scrape path must never
-//! compete with the analysis plane for resources. This is also the
-//! first brick of the ROADMAP's multi-process front door — the listener
-//! that later grows an ingest route.
+//! compete with the analysis plane for resources. Request reading is
+//! the hardened shared parser in [`crate::ingest::http`]: bounded
+//! head (`431`), bounded body (`413`), malformed input answered with
+//! `400` instead of a silently dropped connection, partial reads
+//! tolerated. The ingest gateway mounts these same routes on its own
+//! listener via [`route`], so `autoanalyzer gateway` serves telemetry
+//! and job ingest from one port.
 
-use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -28,12 +31,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::ingest::http::{read_request, write_response};
 use crate::obs::render::{render_prometheus, snapshot_json};
 use crate::obs::trace::{chrome_trace_json, recorder, span_trees_json};
 use crate::{log_info, log_warn, obs_counter, obs_span};
-
-/// Largest request head (request line + headers) we will read.
-const MAX_REQUEST_BYTES: usize = 16 * 1024;
 
 /// Default span count for `GET /trace` when `n` is absent.
 const DEFAULT_TRACE_SPANS: usize = 256;
@@ -108,41 +109,42 @@ fn handle_conn(mut stream: TcpStream) -> Result<()> {
     stream
         .set_read_timeout(Some(Duration::from_secs(2)))
         .context("set read timeout")?;
-    let mut buf = Vec::new();
-    let mut chunk = [0u8; 1024];
-    // Read until the end of the request head; everything we serve is
-    // GET, so any body is ignored.
-    loop {
-        let n = stream.read(&mut chunk).context("read request")?;
-        if n == 0 {
-            break;
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(err) => {
+            // A malformed/oversized request gets a typed status back
+            // (400/413/431) instead of a silently dropped connection;
+            // only transport-level failures give up without answering.
+            obs_counter!("serve_bad_requests_total").inc();
+            return match err.status() {
+                Some((status, body)) => write_response(
+                    &mut stream,
+                    status,
+                    "text/plain; charset=utf-8",
+                    body.as_bytes(),
+                    &[],
+                )
+                .context("write error response"),
+                None => Err(anyhow::Error::new(err).context("read request")),
+            };
         }
-        buf.extend_from_slice(&chunk[..n]);
-        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() >= MAX_REQUEST_BYTES {
-            break;
-        }
-    }
-    let head = String::from_utf8_lossy(&buf);
-    let mut request_line = head.lines().next().unwrap_or("").split_whitespace();
-    let method = request_line.next().unwrap_or("");
-    let target = request_line.next().unwrap_or("/");
+    };
 
     obs_counter!("serve_requests_total").inc();
     let _span = obs_span!("serve_request_seconds");
-    let causal = crate::obs::trace::span("serve_request").attr("target", target.to_string());
-    let (status, content_type, body) = route(method, target);
+    let causal =
+        crate::obs::trace::span("serve_request").attr("target", req.target.clone());
+    let (status, content_type, body) = route(&req.method, &req.target);
     drop(causal);
 
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    stream.write_all(response.as_bytes()).context("write head")?;
-    stream.write_all(body.as_bytes()).context("write body")?;
+    write_response(&mut stream, status, content_type, body.as_bytes(), &[])
+        .context("write response")?;
     Ok(())
 }
 
-fn route(method: &str, target: &str) -> (&'static str, &'static str, String) {
+/// The telemetry routes, shared between [`ObsServer`] and the ingest
+/// gateway (which mounts them next to its `/v1` job routes).
+pub(crate) fn route(method: &str, target: &str) -> (&'static str, &'static str, String) {
     const TEXT: &str = "text/plain; charset=utf-8";
     const PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
     const JSON: &str = "application/json";
@@ -188,6 +190,7 @@ fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{Read, Write};
 
     /// Minimal raw-socket GET: returns (status line, body).
     fn get(addr: SocketAddr, target: &str) -> (String, String) {
@@ -253,6 +256,35 @@ mod tests {
         let mut response = String::new();
         stream.read_to_string(&mut response).unwrap();
         assert!(response.starts_with("HTTP/1.1 405"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn answers_malformed_requests_with_400() {
+        let server = ObsServer::start("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 400"), "{response}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn answers_oversized_heads_with_431() {
+        let server = ObsServer::start("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        let huge = format!(
+            "GET /healthz HTTP/1.1\r\nX-Junk: {}\r\n\r\n",
+            "a".repeat(crate::ingest::http::MAX_HEAD_BYTES + 1024)
+        );
+        // The server may answer (and reset) before the whole head is
+        // written; a late write error is expected, the response is not
+        // allowed to be silence.
+        let _ = stream.write_all(huge.as_bytes());
+        let mut response = String::new();
+        let _ = stream.read_to_string(&mut response);
+        assert!(response.starts_with("HTTP/1.1 431"), "{response}");
         server.shutdown();
     }
 

@@ -45,6 +45,46 @@ pub struct SpanCtx {
     pub span_id: u64,
 }
 
+impl SpanCtx {
+    /// Serialize as a W3C `traceparent` header value
+    /// (`00-<32 hex trace-id>-<16 hex parent-id>-01`) so causality
+    /// crosses *processes*: an ingest client stamps its submit span
+    /// here, the gateway parses it back, and the worker-side span tree
+    /// parents under the remote submitter.
+    ///
+    /// Our ids are 64-bit; the upper 64 bits of the 128-bit wire
+    /// trace-id are zero.
+    pub fn to_traceparent(&self) -> String {
+        format!("00-{:032x}-{:016x}-01", self.trace_id, self.span_id)
+    }
+
+    /// Parse a W3C `traceparent` header value. Accepts any non-`ff`
+    /// version (per spec, future versions must stay parseable as
+    /// version 00). A 128-bit trace-id is truncated to its low 64 bits.
+    /// Returns `None` on malformed input or the all-zero ids the spec
+    /// declares invalid.
+    pub fn from_traceparent(value: &str) -> Option<SpanCtx> {
+        let mut parts = value.trim().split('-');
+        let version = parts.next()?;
+        let trace_hex = parts.next()?;
+        let span_hex = parts.next()?;
+        let _flags = parts.next()?;
+        if version.len() != 2 || version == "ff" || u8::from_str_radix(version, 16).is_err() {
+            return None;
+        }
+        if trace_hex.len() != 32 || span_hex.len() != 16 {
+            return None;
+        }
+        let trace128 = u128::from_str_radix(trace_hex, 16).ok()?;
+        let span_id = u64::from_str_radix(span_hex, 16).ok()?;
+        let trace_id = trace128 as u64;
+        if trace128 == 0 || span_id == 0 {
+            return None;
+        }
+        Some(SpanCtx { trace_id, span_id })
+    }
+}
+
 /// One completed span, as stored in the flight recorder.
 #[derive(Debug, Clone)]
 pub struct SpanRecord {
@@ -462,6 +502,42 @@ mod tests {
         assert_eq!(s.attr("worker"), Some("3"));
         assert_eq!(s.attr("stolen"), Some("true"));
         assert_eq!(s.attr("missing"), None);
+    }
+
+    #[test]
+    fn traceparent_round_trips() {
+        let ctx = SpanCtx {
+            trace_id: 0xDEAD_BEEF_0042,
+            span_id: 7,
+        };
+        let header = ctx.to_traceparent();
+        assert_eq!(header, "00-00000000000000000000deadbeef0042-0000000000000007-01");
+        assert_eq!(SpanCtx::from_traceparent(&header), Some(ctx));
+        // Whitespace tolerated, 128-bit trace ids truncate to low 64.
+        assert_eq!(
+            SpanCtx::from_traceparent(" 00-ffffffffffffffff0000deadbeef0042-0000000000000007-01 "),
+            Some(ctx)
+        );
+    }
+
+    #[test]
+    fn traceparent_rejects_malformed_values() {
+        for bad in [
+            "",
+            "00",
+            "00-xyz-0000000000000007-01",
+            // Wrong field widths.
+            "00-deadbeef-0000000000000007-01",
+            "00-0000000000000000000000000000002a-007-01",
+            // Forbidden version / all-zero ids.
+            "ff-0000000000000000000000000000002a-0000000000000007-01",
+            "00-00000000000000000000000000000000-0000000000000007-01",
+            "00-0000000000000000000000000000002a-0000000000000000-01",
+            // Missing flags.
+            "00-0000000000000000000000000000002a-0000000000000007",
+        ] {
+            assert_eq!(SpanCtx::from_traceparent(bad), None, "accepted {bad:?}");
+        }
     }
 
     #[test]

@@ -321,6 +321,112 @@ fn serve_listen_starts_endpoint() {
 }
 
 #[test]
+fn gateway_serves_ingest_and_telemetry_on_one_port() {
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    let mut child = bin()
+        .args([
+            "gateway",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+            "--backend",
+            "native",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn gateway");
+    let addr = {
+        let stdout = child.stdout.take().expect("gateway stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        loop {
+            let line = lines
+                .next()
+                .expect("gateway exited before announcing its address")
+                .expect("read gateway stdout");
+            if let Some(rest) = line.strip_prefix("gateway listening on ") {
+                break rest.trim().to_string();
+            }
+        }
+    };
+
+    let get = |target: &str| -> (String, String) {
+        let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+        stream
+            .write_all(format!("GET {target} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        let status = response.lines().next().unwrap_or("").to_string();
+        let body = response
+            .split_once("\r\n\r\n")
+            .map(|(_, b)| b.to_string())
+            .unwrap_or_default();
+        (status, body)
+    };
+
+    let (status, body) = get("/healthz");
+    assert_eq!(status, "HTTP/1.1 200 OK", "{body}");
+    let (status, body) = get("/v1/jobs");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    let doc = autoanalyzer::util::json::Json::parse(&body).expect("job listing is JSON");
+    assert!(doc.get("jobs").and_then(|v| v.as_arr()).is_some());
+    let (status, _) = get("/metrics");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+
+    child.kill().expect("kill gateway");
+    child.wait().expect("reap gateway");
+}
+
+#[test]
+fn analyze_trace_emits_machine_readable_report() {
+    let dir = std::env::temp_dir().join("autoanalyzer-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("report-out.json");
+    let report = dir.join("report-out-report.json");
+    assert!(bin()
+        .args([
+            "simulate",
+            "--workload",
+            "synthetic",
+            "--inject",
+            "imbalance",
+            "--out",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap()
+        .status
+        .success());
+    let out = bin()
+        .args([
+            "analyze-trace",
+            trace.to_str().unwrap(),
+            "--backend",
+            "native",
+            "--json",
+            "--report-out",
+            report.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // --json prints the same document --report-out writes.
+    let printed = autoanalyzer::util::json::Json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("--json emits valid JSON");
+    let written = autoanalyzer::util::json::Json::parse(
+        &std::fs::read_to_string(&report).expect("report file written"),
+    )
+    .expect("report file is valid JSON");
+    assert_eq!(printed, written);
+    assert!(written.get("dissimilarity").is_some());
+    assert!(written.get("timings").is_some());
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(&report).ok();
+}
+
+#[test]
 fn unknown_workload_fails_cleanly() {
     let out = bin()
         .args(["analyze", "--workload", "doom"])

@@ -1,0 +1,184 @@
+//! Cross-process causality through the ingest plane: a submitter's
+//! span, shipped as a W3C-style `traceparent` header, must come out
+//! the other side as the root of the span tree for the HTTP-submitted
+//! job — `submitter span → ingest_request → coordinator_job →
+//! pipeline stage`, including when the job is work-stolen by a
+//! sibling worker.
+//!
+//! The gateway runs in-process here (so the flight recorder sees both
+//! sides), but the parent context crosses a real TCP connection as a
+//! header — exactly what a remote submitter does. The recorder is
+//! process-global, so every assertion filters down to this test's own
+//! `trace_id` first.
+
+use std::time::{Duration, Instant};
+
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::ingest::{Codec, Gateway, GatewayConfig, IngestClient};
+use autoanalyzer::obs::trace::{recorder, span, SpanRecord};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::Trace;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn native_factory() -> anyhow::Result<Box<dyn ClusterBackend>> {
+    Ok(Box::new(NativeBackend))
+}
+
+fn small_trace(seed: u64) -> Trace {
+    simulate(&synthetic(4, 6, &[], seed), seed)
+}
+
+/// Spans of one causal trace, polled until `pred` is satisfied — the
+/// worker-side job span is recorded slightly after the outcome is
+/// delivered, so a fast poller must wait for the recorder to catch up.
+fn spans_when<F>(trace_id: u64, pred: F) -> Vec<SpanRecord>
+where
+    F: Fn(&[SpanRecord]) -> bool,
+{
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let spans: Vec<SpanRecord> = recorder()
+            .recent(usize::MAX)
+            .into_iter()
+            .filter(|s| s.trace_id == trace_id)
+            .collect();
+        if pred(&spans) || Instant::now() > deadline {
+            return spans;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The full chain for one HTTP-submitted job: the client's current
+/// span crosses the wire as `traceparent` and parents everything the
+/// worker does.
+#[test]
+fn traceparent_header_parents_the_whole_remote_chain() {
+    let gw = Gateway::start(
+        "127.0.0.1:0",
+        GatewayConfig {
+            workers: 1,
+            ..GatewayConfig::default()
+        },
+        native_factory,
+    )
+    .unwrap();
+    let mut client = IngestClient::new(gw.addr().to_string());
+
+    let root = span("test_remote_submitter");
+    let ctx = root.ctx();
+    let id = client.submit(&small_trace(51), Codec::Json).unwrap();
+    client.wait_for_report(id, Duration::from_secs(60)).unwrap();
+    drop(root);
+
+    let spans = spans_when(ctx.trace_id, |spans| {
+        spans.iter().any(|s| s.name == "pipeline_analyze")
+    });
+
+    // Submitter → (wire) → gateway request handler.
+    let ingest = spans
+        .iter()
+        .find(|s| s.name == "ingest_request" && s.attr("path") == Some("/v1/jobs"))
+        .expect("ingest_request span in the submitter's trace");
+    assert_eq!(
+        ingest.parent_id, ctx.span_id,
+        "traceparent header must parent the gateway-side request span"
+    );
+
+    // Request handler → worker.
+    let job = spans
+        .iter()
+        .find(|s| s.name == "coordinator_job" && s.attr("job") == Some(id.to_string().as_str()))
+        .expect("coordinator_job span for the submitted job");
+    assert_eq!(
+        job.parent_id, ingest.span_id,
+        "worker span must be parented under the ingest request"
+    );
+
+    // Worker → pipeline → stage: same-thread nesting, same trace.
+    let pipeline = spans
+        .iter()
+        .find(|s| s.name == "pipeline_analyze")
+        .expect("pipeline_analyze span");
+    assert_eq!(pipeline.parent_id, job.span_id);
+    let stage = spans
+        .iter()
+        .find(|s| s.name == "pipeline_stage_dissimilarity")
+        .expect("dissimilarity stage span");
+    assert_eq!(stage.parent_id, pipeline.span_id);
+
+    gw.shutdown();
+}
+
+/// The chain survives a work-steal: one big job pins a worker, the
+/// sibling drains the pinned worker's shard by stealing — and every
+/// stolen job still attributes to the remote submitter. Retried a few
+/// times because the steal depends on scheduler timing; the parentage
+/// assertions run unconditionally on every attempt.
+#[test]
+fn remote_chain_survives_work_stealing() {
+    let mut saw_steal = false;
+    for _attempt in 0..3 {
+        let gw = Gateway::start(
+            "127.0.0.1:0",
+            GatewayConfig {
+                workers: 2,
+                queue_cap: 64,
+                ..GatewayConfig::default()
+            },
+            native_factory,
+        )
+        .unwrap();
+        let mut client = IngestClient::new(gw.addr().to_string());
+
+        let root = span("test_steal_submitter");
+        let ctx = root.ctx();
+        // One heavy trace to pin whichever worker pops it, then a tail
+        // of small ones: whichever shard the heavy job's worker owns
+        // can only drain through its idle sibling's steals.
+        let big = simulate(&synthetic(16, 24, &[(3, Inject::Imbalance)], 5), 5);
+        let mut ids = vec![client.submit(&big, Codec::Json).unwrap()];
+        for seed in 0..12u64 {
+            ids.push(client.submit(&small_trace(seed), Codec::Json).unwrap());
+        }
+        for &id in &ids {
+            client.wait_for_report(id, Duration::from_secs(120)).unwrap();
+        }
+        drop(root);
+
+        let n = ids.len();
+        let spans = spans_when(ctx.trace_id, |spans| {
+            spans.iter().filter(|s| s.name == "coordinator_job").count() >= n
+        });
+        let requests: Vec<&SpanRecord> = spans
+            .iter()
+            .filter(|s| s.name == "ingest_request" && s.attr("path") == Some("/v1/jobs"))
+            .collect();
+        assert_eq!(requests.len(), n, "one ingest_request per submission");
+        for r in &requests {
+            assert_eq!(r.parent_id, ctx.span_id, "every request parents to the submitter");
+        }
+        let jobs: Vec<&SpanRecord> = spans
+            .iter()
+            .filter(|s| s.name == "coordinator_job")
+            .collect();
+        assert_eq!(jobs.len(), n, "one worker span per job");
+        for j in &jobs {
+            assert!(
+                requests.iter().any(|r| r.span_id == j.parent_id),
+                "job span {:?} must be parented under an ingest request",
+                j.attr("job")
+            );
+        }
+        let stolen = jobs.iter().any(|j| j.attr("stolen") == Some("true"));
+        gw.shutdown();
+        if stolen {
+            saw_steal = true;
+            break;
+        }
+    }
+    assert!(
+        saw_steal,
+        "no attempt recorded a stolen HTTP-submitted job; steal causality untested"
+    );
+}

@@ -1,0 +1,261 @@
+//! End-to-end: the ingest plane over real sockets.
+//!
+//! The acceptance properties of the network front door:
+//!
+//! 1. a trace submitted through [`IngestClient`] to a live [`Gateway`]
+//!    yields a run-report *identical* (modulo wall-clock timings) to
+//!    running [`analyze`] in-process on the same trace;
+//! 2. a saturated queue answers `429 Too Many Requests` with a
+//!    `Retry-After` header, and the client's backoff honors it — the
+//!    successful retry lands no earlier than the advertised floor;
+//! 3. a draining gateway answers `503` to new submissions while every
+//!    job accepted before the drain completes and keeps its report.
+//!
+//! Worker gating uses the same Mutex+Condvar factory idiom as the
+//! coordinator's own backpressure tests: workers block inside the
+//! backend factory until the test opens the gate, so the queue can be
+//! saturated deterministically.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use autoanalyzer::analysis::pipeline::{analyze, AnalysisConfig};
+use autoanalyzer::cluster::{ClusterBackend, NativeBackend};
+use autoanalyzer::ingest::http::read_response;
+use autoanalyzer::ingest::{Codec, Gateway, GatewayConfig, IngestClient, JobState};
+use autoanalyzer::simulator::engine::simulate;
+use autoanalyzer::trace::{json_codec, Trace};
+use autoanalyzer::util::json::Json;
+use autoanalyzer::workloads::synthetic::{synthetic, Inject};
+
+fn native_factory() -> anyhow::Result<Box<dyn ClusterBackend>> {
+    Ok(Box::new(NativeBackend))
+}
+
+fn small_trace(seed: u64) -> Trace {
+    simulate(&synthetic(4, 6, &[(2, Inject::Imbalance)], seed), seed)
+}
+
+/// Gate shared by test and worker factories: workers park inside the
+/// factory until the test opens it.
+type Gate = Arc<(Mutex<bool>, Condvar)>;
+
+fn gated_factory(gate: &Gate) -> impl Fn() -> anyhow::Result<Box<dyn ClusterBackend>> + Send + Clone + 'static
+{
+    let g = gate.clone();
+    move || {
+        let (lock, cv) = &*g;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(Box::new(NativeBackend) as Box<dyn ClusterBackend>)
+    }
+}
+
+fn open_gate(gate: &Gate) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+/// Raw one-shot request, returning the parsed response (the client's
+/// retry loop would hide the 429/503 we want to see).
+fn raw(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> autoanalyzer::ingest::http::Response {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let head = if body.is_empty() {
+        format!("{method} {path} HTTP/1.1\r\nHost: t\r\n\r\n")
+    } else {
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+    };
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.write_all(body.as_bytes()).unwrap();
+    read_response(&mut stream).unwrap()
+}
+
+/// Drop volatile keys (wall-clock timings) before comparing reports.
+fn strip(doc: &Json, key: &str) -> Json {
+    match doc {
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .filter(|(k, _)| k != key)
+                .map(|(k, v)| (k.clone(), strip(v, key)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Acceptance property 1: the remote path is report-identical to the
+/// in-process path, for both wire codecs.
+#[test]
+fn remote_report_matches_in_process_analysis() {
+    let gw = Gateway::start("127.0.0.1:0", GatewayConfig::default(), native_factory).unwrap();
+    let mut client = IngestClient::new(gw.addr().to_string());
+
+    for (seed, codec) in [(11u64, Codec::Json), (12u64, Codec::Xml)] {
+        let trace = small_trace(seed);
+        let id = client.submit(&trace, codec).unwrap();
+        let remote = client.wait_for_report(id, Duration::from_secs(60)).unwrap();
+        let local = analyze(
+            &Arc::new(small_trace(seed)),
+            &NativeBackend,
+            &AnalysisConfig::default(),
+        )
+        .unwrap()
+        .run_report();
+        assert_eq!(
+            strip(&remote, "timings"),
+            strip(&local, "timings"),
+            "seed {seed} ({codec:?}): remote report diverged from in-process analyze"
+        );
+        // Sanity: the findings are real, not trivially empty.
+        assert_eq!(
+            remote
+                .get("dissimilarity")
+                .and_then(|d| d.get("exists"))
+                .and_then(Json::as_bool),
+            Some(true),
+            "seed {seed}: injected imbalance must be found remotely"
+        );
+    }
+    gw.shutdown();
+}
+
+/// Acceptance property 2: queue saturation is a typed `429` with a
+/// `Retry-After` the client honors — its successful retry arrives no
+/// earlier than the floor.
+#[test]
+fn saturated_queue_yields_429_and_client_honors_retry_after() {
+    let gate: Gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let config = GatewayConfig {
+        workers: 1,
+        queue_cap: 1,
+        retry_after_secs: 1,
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start("127.0.0.1:0", config, gated_factory(&gate)).unwrap();
+    let addr = gw.addr();
+    let body = json_codec::to_json(&small_trace(21)).pretty();
+
+    // Worker gated shut: the single queue slot fills on submit #1...
+    let resp = raw(addr, "POST", "/v1/jobs", &body);
+    assert_eq!(resp.status, 202, "{}", resp.text());
+    let first_id = Json::parse(&resp.text())
+        .unwrap()
+        .get("job")
+        .and_then(Json::as_usize)
+        .unwrap() as u64;
+
+    // ...and submit #2 is a typed backpressure rejection.
+    let resp = raw(addr, "POST", "/v1/jobs", &body);
+    assert_eq!(resp.status, 429, "{}", resp.text());
+    assert_eq!(
+        resp.header("retry-after"),
+        Some("1"),
+        "429 must advertise the retry floor"
+    );
+    let doc = Json::parse(&resp.text()).unwrap();
+    assert_eq!(doc.get("error").and_then(Json::as_str), Some("queue full"));
+    // The rejected job must not occupy retention (it was never queued).
+    assert_eq!(gw.store().len(), 1, "rejected job leaked into the store");
+
+    // Batch overflow is the same contract.
+    let batch = format!("{{\"jobs\": [{body}, {body}]}}");
+    let resp = raw(addr, "POST", "/v1/jobs:batch", &batch);
+    assert_eq!(resp.status, 429, "{}", resp.text());
+    assert!(resp.header("retry-after").is_some());
+
+    // Open the gate shortly after the client's first (rejected)
+    // attempt: the retry can only succeed after the Retry-After floor.
+    let g = gate.clone();
+    let opener = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        open_gate(&g);
+    });
+    let mut client =
+        IngestClient::new(addr.to_string()).with_retry(4, Duration::from_millis(50));
+    let start = Instant::now();
+    let id = client
+        .submit(&small_trace(22), Codec::Json)
+        .expect("retry must eventually be accepted");
+    let elapsed = start.elapsed();
+    assert!(
+        elapsed >= Duration::from_secs(1),
+        "client retried after {elapsed:?}, undercutting Retry-After: 1"
+    );
+    opener.join().unwrap();
+
+    // Everything accepted completes.
+    client.wait_for_report(first_id, Duration::from_secs(60)).unwrap();
+    client.wait_for_report(id, Duration::from_secs(60)).unwrap();
+    gw.shutdown();
+}
+
+/// Acceptance property 3 (drain satellite): `begin_drain` answers new
+/// submissions with `503` while every already-accepted job completes
+/// and keeps its report — no accepted job is lost.
+#[test]
+fn draining_gateway_rejects_new_work_but_loses_nothing() {
+    let gate: Gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let config = GatewayConfig {
+        workers: 2,
+        queue_cap: 8,
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start("127.0.0.1:0", config, gated_factory(&gate)).unwrap();
+    let addr = gw.addr();
+
+    // Accept a handful of jobs while the workers are gated shut.
+    let mut accepted = Vec::new();
+    for seed in 30..34u64 {
+        let body = json_codec::to_json(&small_trace(seed)).pretty();
+        let resp = raw(addr, "POST", "/v1/jobs", &body);
+        assert_eq!(resp.status, 202, "{}", resp.text());
+        let id = Json::parse(&resp.text())
+            .unwrap()
+            .get("job")
+            .and_then(Json::as_usize)
+            .unwrap() as u64;
+        accepted.push(id);
+    }
+
+    gw.begin_drain();
+    assert!(gw.is_draining());
+
+    // New submissions bounce with 503 (+ Retry-After, for symmetry
+    // with 429 so naive clients back off either way).
+    let body = json_codec::to_json(&small_trace(40)).pretty();
+    let resp = raw(addr, "POST", "/v1/jobs", &body);
+    assert_eq!(resp.status, 503, "{}", resp.text());
+    assert!(resp.header("retry-after").is_some());
+    let resp = raw(addr, "POST", "/v1/jobs:batch", &format!("[{body}]"));
+    assert_eq!(resp.status, 503, "{}", resp.text());
+
+    // Reads still work while draining.
+    let resp = raw(addr, "GET", &format!("/v1/jobs/{}", accepted[0]), "");
+    assert_eq!(resp.status, 200);
+
+    // Open the gate: the drain must complete every accepted job.
+    open_gate(&gate);
+    let mut client = IngestClient::new(addr.to_string());
+    for &id in &accepted {
+        let report = client
+            .wait_for_report(id, Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("accepted job {id} lost in drain: {e:#}"));
+        assert!(report.get("dissimilarity").is_some());
+        assert_eq!(gw.store().state(id), Some(JobState::Done));
+    }
+    gw.shutdown();
+}
